@@ -1,0 +1,39 @@
+"""Fleet lifecycle study (paper §6.2–6.3, Figs. 13–15).
+
+Sweeps the four reference designs across GPU TDP scenarios and prints the
+lifecycle metrics that separate designs which look identical at
+commissioning.  Use --scale 1.0 for the full 10 GW study (hours).
+
+    PYTHONPATH=src python examples/fleet_study.py [--scale 0.03]
+"""
+import argparse
+
+from repro.core import cost, hierarchy, projections as proj
+from repro.core.arrivals import EnvelopeSpec
+from repro.core.fleet import FleetConfig, run_fleet
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.03)
+    ap.add_argument("--scenarios", nargs="+",
+                    default=[proj.LOW, proj.MED, proj.HIGH])
+    args = ap.parse_args()
+
+    print(f"{'design':8s} {'tdp':5s} {'halls':>6s} {'deployed':>9s} "
+          f"{'P90str':>7s} {'init$/MW':>9s} {'eff$/MW':>9s} {'gap':>6s}")
+    for scenario in args.scenarios:
+        for name in ("4N/3", "3+1", "10N/8", "8+2"):
+            env = EnvelopeSpec(demand_scale=args.scale,
+                               gpu_scenario=scenario)
+            r = run_fleet(FleetConfig(hierarchy.get_design(name), env,
+                                      seed=0))
+            gap = r.effective_dpm / r.initial_dpm - 1
+            print(f"{name:8s} {scenario:5s} {r.n_halls_built:6d} "
+                  f"{r.final_deployed_mw:8.0f}M {r.p90_stranding[-1]:6.1%} "
+                  f"{r.initial_dpm/1e6:8.2f}M {r.effective_dpm/1e6:8.2f}M "
+                  f"{gap:6.1%}")
+
+
+if __name__ == "__main__":
+    main()

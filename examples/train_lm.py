@@ -1,0 +1,71 @@
+"""End-to-end training driver: trains a ~100M-parameter Qwen3-family model
+for a few hundred steps with the full production stack — shard-aware data
+pipeline, AdamW, async checkpointing, straggler supervision.
+
+Default runs a ~10M config for 100 steps (~2 min on this 1-core CPU
+container); --size 100m trains the ~100M config (same code path, longer).
+
+    PYTHONPATH=src python examples/train_lm.py [--size 100m --steps 300]
+"""
+import argparse
+from dataclasses import replace
+
+from repro.configs.base import get_smoke_config
+from repro.launch import train as train_launch
+
+
+SIZES = {
+    "10m": dict(n_layers=4, d_model=256, n_heads=4, n_kv_heads=2,
+                d_ff=1024, vocab=8192, head_dim=64),
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                 d_ff=2048, vocab=32768, head_dim=64),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", default="10m", choices=list(SIZES))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    cfg = replace(get_smoke_config("qwen3-1.7b"), **SIZES[args.size],
+                  remat="none")
+    import repro.launch.train as T
+    import jax, jax.numpy as jnp
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.data.pipeline import PipelineConfig, TokenPipeline
+    from repro.models.api import build_model
+    from repro.optim import adamw
+    from repro.runtime.fault import Supervisor
+    from repro.train.step import make_train_step
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = adamw.init(params)
+    print(f"params={model.n_params():,}")
+    step_fn = jax.jit(make_train_step(model, adamw.AdamWConfig(lr=1e-3)),
+                      donate_argnums=(0, 1))
+    pipe = TokenPipeline(PipelineConfig(args.batch, args.seq, cfg.vocab))
+    ckpt = Checkpointer("/tmp/repro_train_lm", keep=2)
+
+    def one(state, step):
+        p, o = state
+        p, o, m = step_fn(p, o, {"tokens": jnp.asarray(pipe._batch_at(step))})
+        if step % 20 == 0:
+            print(f"  step {step}: loss={float(m['loss']):.3f} "
+                  f"gnorm={float(m['grad_norm']):.2f}")
+        return (p, o), m
+
+    sup = Supervisor(one, lambda s, st: ckpt.save(s, st),
+                     lambda: ckpt.restore((params, opt_state)),
+                     checkpoint_every=50)
+    state, step, hist, _ = sup.run((params, opt_state), 0, args.steps)
+    ckpt.wait()
+    print(f"done: steps={step} "
+          f"loss {float(hist[0]['loss']):.3f} -> {float(hist[-1]['loss']):.3f}")
+
+
+if __name__ == "__main__":
+    main()

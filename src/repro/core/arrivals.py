@@ -1,0 +1,217 @@
+"""Arrival envelopes and deployment-trace generation (paper §5.1–5.2).
+
+Stage (1): class-level arrival envelopes — annual power targets per hardware
+class (accelerators / general compute / storage) spread into monthly budgets
+with seasonality weights.  Stage (2): per-SKU rack power via empirical SKU
+clusters (Eq. 3).  Stage (3): lifecycle metadata (availability tier,
+lifetime, harvest fraction).
+
+Trace generation is host-side numpy (it parameterizes the simulations);
+the placement simulators consume the resulting arrays on device.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+from . import projections as proj
+from .resources import CLASS_COMPUTE, CLASS_GPU, CLASS_STORAGE, TIER_HA, TIER_LA
+
+# SKU clusters (α_j, p_j) — stylized from the paper's Fig. 11 empirical
+# clusters of Azure general-compute / storage rack-power distributions.
+COMPUTE_SKUS = ((0.45, 0.25), (0.65, 0.35), (0.85, 0.25), (1.00, 0.15))
+STORAGE_SKUS = ((0.60, 0.30), (0.80, 0.50), (1.00, 0.20))
+
+# Lifetimes (paper §5.2): N(7,1) yrs compute/storage, N(5,0.5) yrs GPU.
+LIFETIME = {CLASS_GPU: (5.0, 0.5), CLASS_COMPUTE: (7.0, 1.0),
+            CLASS_STORAGE: (7.0, 1.0)}
+# Harvest ceilings after 1 year (paper §5.2).
+HARVEST_FRAC = {CLASS_GPU: 0.10, CLASS_COMPUTE: 0.15, CLASS_STORAGE: 0.15}
+
+# Quarterly seasonality (stylized after Azure procurement cycles, §5.1).
+SEASONALITY = np.array([0.8, 0.95, 1.05, 1.2])
+SEASONALITY = np.repeat(SEASONALITY / SEASONALITY.sum(), 3) / 3.0  # monthly
+
+
+@dataclass
+class Trace:
+    """Flat arrays, one entry per deployment event (cluster or pod)."""
+    month: np.ndarray        # int32, months since start
+    class_id: np.ndarray     # int32
+    rack_kw: np.ndarray      # float32
+    n_racks: np.ndarray      # int32
+    is_gpu: np.ndarray       # bool
+    is_pod: np.ndarray       # bool
+    tier: np.ndarray         # int32
+    lifetime_m: np.ndarray   # int32 months
+    harvest_frac: np.ndarray  # float32
+
+    def __len__(self):
+        return len(self.month)
+
+    @property
+    def total_kw(self):
+        return float(np.sum(self.rack_kw * self.n_racks))
+
+    @staticmethod
+    def concat(traces):
+        return Trace(**{f: np.concatenate([getattr(t, f) for t in traces])
+                        for f in Trace.__dataclass_fields__})
+
+    def sorted_by_month(self):
+        o = np.argsort(self.month, kind="stable")
+        return Trace(**{f: getattr(self, f)[o]
+                        for f in Trace.__dataclass_fields__})
+
+
+@dataclass
+class EnvelopeSpec:
+    """Demand envelope (paper Table 1: 10 GW cumulative by default —
+    6.0 GPU / 2.8 compute / 1.2 storage — scalable via `demand_scale`)."""
+    start_year: int = 2026
+    end_year: int = 2034
+    demand_scale: float = 1.0          # 1.0 ⇒ 10 GW cumulative
+    gpu_gw: float = 6.0
+    compute_gw: float = 2.8
+    storage_gw: float = 1.2
+    growth: Dict[int, float] = field(default_factory=lambda: {
+        CLASS_GPU: 1.35, CLASS_COMPUTE: 1.15, CLASS_STORAGE: 1.10})
+    gpu_scenario: str = proj.MED
+    nongpu_scenario: str = proj.MED
+    pod_racks: int = 1                  # 1 = rack-scale GPU; 3–7 = pods
+    pod_scale_arch: bool = False        # use Kyber pods from 2027
+    quantum_racks: int = 10             # same-SKU racks per cluster (§6.4)
+    la_fraction: float = 0.0            # share of LA-tier arrivals
+
+    def annual_targets_kw(self, class_id: int) -> np.ndarray:
+        total_gw = {CLASS_GPU: self.gpu_gw, CLASS_COMPUTE: self.compute_gw,
+                    CLASS_STORAGE: self.storage_gw}[class_id]
+        total_kw = total_gw * 1e6 * self.demand_scale
+        years = np.arange(self.start_year, self.end_year + 1)
+        w = self.growth[class_id] ** np.arange(len(years))
+        return total_kw * w / w.sum()
+
+
+def _rack_kw_for(env: EnvelopeSpec, class_id: int, year: int,
+                 rng: np.random.Generator) -> float:
+    if class_id == CLASS_GPU:
+        return proj.gpu_rack_kw(year, env.gpu_scenario,
+                                pod_scale=env.pod_scale_arch or env.pod_racks > 1)
+    if class_id == CLASS_COMPUTE:
+        pmax, skus = proj.compute_rack_kw(year, env.nongpu_scenario), COMPUTE_SKUS
+    else:
+        pmax, skus = proj.storage_rack_kw(year, env.nongpu_scenario), STORAGE_SKUS
+    alphas = np.array([a for a, _ in skus])
+    probs = np.array([p for _, p in skus])
+    return float(pmax * rng.choice(alphas, p=probs))     # Eq. 3
+
+
+def generate_fleet_trace(env: EnvelopeSpec, seed: int = 0) -> Trace:
+    """Multi-year deployment trace over the buildout horizon (§5.1)."""
+    rng = np.random.default_rng(seed)
+    years = np.arange(env.start_year, env.end_year + 1)
+    recs = {f: [] for f in Trace.__dataclass_fields__}
+
+    def emit(month, class_id, rack_kw, n_racks, is_pod, year):
+        mu, sd = LIFETIME[class_id]
+        life = max(12, int(round(rng.normal(mu, sd) * 12)))
+        tier = TIER_LA if rng.random() < env.la_fraction else TIER_HA
+        recs["month"].append(month)
+        recs["class_id"].append(class_id)
+        recs["rack_kw"].append(rack_kw)
+        recs["n_racks"].append(n_racks)
+        recs["is_gpu"].append(class_id == CLASS_GPU)
+        recs["is_pod"].append(is_pod)
+        recs["tier"].append(tier)
+        recs["lifetime_m"].append(life)
+        recs["harvest_frac"].append(HARVEST_FRAC[class_id])
+
+    for class_id in (CLASS_GPU, CLASS_COMPUTE, CLASS_STORAGE):
+        targets = env.annual_targets_kw(class_id)
+        carry = 0.0          # over-spend debt carried into the next month
+        for yi, year in enumerate(years):
+            for mo in range(12):
+                month = yi * 12 + mo
+                budget = targets[yi] * SEASONALITY[mo] + carry
+                spent = 0.0
+                while spent < budget:
+                    kw = _rack_kw_for(env, class_id, year, rng)
+                    if class_id == CLASS_GPU:
+                        n = env.pod_racks if env.pod_racks > 1 else 1
+                        is_pod = env.pod_racks > 1
+                    else:
+                        n = env.quantum_racks
+                        is_pod = False
+                    emit(month, class_id, kw, n, is_pod, year)
+                    spent += kw * n
+                carry = budget - spent
+
+    t = Trace(**{f: np.asarray(v) for f, v in recs.items()})
+    t.month = t.month.astype(np.int32)
+    t.class_id = t.class_id.astype(np.int32)
+    t.rack_kw = t.rack_kw.astype(np.float32)
+    t.n_racks = t.n_racks.astype(np.int32)
+    t.tier = t.tier.astype(np.int32)
+    t.lifetime_m = t.lifetime_m.astype(np.int32)
+    t.harvest_frac = t.harvest_frac.astype(np.float32)
+    return t.sorted_by_month()
+
+
+def sample_mixed_trace(n_events: int, year: int = 2028,
+                       scenario: str = proj.MED, seed: int = 0,
+                       gpu_power_share: float = 0.6,
+                       pod_racks: int = 1, quantum_racks: int = 10,
+                       la_fraction: float = 0.0) -> Trace:
+    """Steady-state mixed-SKU stream for single-hall Monte Carlo (§4.4).
+
+    Event class probabilities are derived from the target *power* shares
+    (GPU/compute/storage ≈ gpu_share/0.7·rest/0.3·rest of added power).
+    """
+    rng = np.random.default_rng(seed)
+    env = EnvelopeSpec(gpu_scenario=scenario, nongpu_scenario=scenario,
+                       pod_racks=pod_racks, quantum_racks=quantum_racks,
+                       la_fraction=la_fraction)
+    shares = {CLASS_GPU: gpu_power_share,
+              CLASS_COMPUTE: (1 - gpu_power_share) * 0.7,
+              CLASS_STORAGE: (1 - gpu_power_share) * 0.3}
+    # convert power shares → event probabilities via mean event power
+    mean_event_kw = {}
+    for cid in shares:
+        kws = [_rack_kw_for(env, cid, year, rng) for _ in range(64)]
+        n = pod_racks if (cid == CLASS_GPU and pod_racks > 1) else (
+            1 if cid == CLASS_GPU else quantum_racks)
+        mean_event_kw[cid] = np.mean(kws) * n
+    p = np.array([shares[c] / mean_event_kw[c]
+                  for c in (CLASS_GPU, CLASS_COMPUTE, CLASS_STORAGE)])
+    p = p / p.sum()
+
+    recs = {f: [] for f in Trace.__dataclass_fields__}
+    for i in range(n_events):
+        cid = int(rng.choice([CLASS_GPU, CLASS_COMPUTE, CLASS_STORAGE], p=p))
+        kw = _rack_kw_for(env, cid, year, rng)
+        if cid == CLASS_GPU:
+            n, is_pod = (pod_racks, pod_racks > 1) if pod_racks > 1 else (1, False)
+        else:
+            n, is_pod = quantum_racks, False
+        mu, sd = LIFETIME[cid]
+        recs["month"].append(0)
+        recs["class_id"].append(cid)
+        recs["rack_kw"].append(kw)
+        recs["n_racks"].append(n)
+        recs["is_gpu"].append(cid == CLASS_GPU)
+        recs["is_pod"].append(is_pod)
+        recs["tier"].append(TIER_LA if rng.random() < la_fraction else TIER_HA)
+        recs["lifetime_m"].append(max(12, int(round(rng.normal(mu, sd) * 12))))
+        recs["harvest_frac"].append(HARVEST_FRAC[cid])
+
+    t = Trace(**{f: np.asarray(v) for f, v in recs.items()})
+    t.month = t.month.astype(np.int32)
+    t.class_id = t.class_id.astype(np.int32)
+    t.rack_kw = t.rack_kw.astype(np.float32)
+    t.n_racks = t.n_racks.astype(np.int32)
+    t.tier = t.tier.astype(np.int32)
+    t.lifetime_m = t.lifetime_m.astype(np.int32)
+    t.harvest_frac = t.harvest_frac.astype(np.float32)
+    return t

@@ -1,0 +1,209 @@
+"""Fleet-scale lifecycle simulator (paper §4.4, Fig. 8 pipeline).
+
+Places a multi-year arrival trace across a growing fleet of identical
+halls: opens a new hall when no feasible placement exists (instant
+commissioning, §4.2), harvests racks one year after deployment, and
+decommissions racks at end-of-life.  The monthly loop is host-side Python
+(108 iterations); each month's decommission/harvest/placement work runs as
+one jitted step over padded static shapes.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import arrivals, cost, placement as pl
+from .arrivals import EnvelopeSpec, Trace, generate_fleet_trace
+from .hierarchy import DesignSpec, build_topology
+from .placement import DEFAULT_POLICY, Deployment, MAX_POD_RACKS
+
+
+@dataclass
+class FleetConfig:
+    design: DesignSpec
+    env: EnvelopeSpec = field(default_factory=EnvelopeSpec)
+    policy: int = DEFAULT_POLICY
+    harvest: bool = True
+    seed: int = 0
+    n_halls_max: int = 0          # 0 → auto-size from demand
+    mature_months: int = 12       # halls older than this enter tail stats
+
+
+@dataclass
+class FleetResult:
+    months: np.ndarray            # [M]
+    halls_active: np.ndarray      # [M]
+    deployed_mw: np.ndarray       # [M]
+    p50_stranding: np.ndarray     # [M] over mature halls
+    p90_stranding: np.ndarray     # [M]
+    final_hall_stranding: np.ndarray   # [H_active]
+    final_lineup_stranding: np.ndarray  # [X_active] (active halls)
+    n_halls_built: int
+    final_deployed_mw: float
+    placed_fraction: float
+    design: DesignSpec = None
+    env: EnvelopeSpec = None
+
+    @property
+    def initial_dpm(self):
+        return cost.initial_dollars_per_mw(self.design)
+
+    @property
+    def effective_dpm(self):
+        return cost.effective_dollars_per_mw(
+            self.design, self.n_halls_built, self.final_deployed_mw)
+
+    @property
+    def total_capex(self):
+        return self.n_halls_built * cost.hall_capex(self.design)
+
+
+def _auto_halls(design: DesignSpec, env: EnvelopeSpec) -> int:
+    total_mw = (env.gpu_gw + env.compute_gw + env.storage_gw) * 1e3 * env.demand_scale
+    # decommissioning returns capacity; 45% slack covers stranding + churn
+    return int(np.ceil(total_mw / (design.ha_capacity_kw / 1e3) * 1.45)) + 4
+
+
+def run_fleet(cfg: FleetConfig, trace: Trace | None = None) -> FleetResult:
+    design, env = cfg.design, cfg.env
+    if trace is None:
+        trace = generate_fleet_trace(env, cfg.seed)
+    months = (env.end_year - env.start_year + 1) * 12
+    H = cfg.n_halls_max or _auto_halls(design, env)
+    topo = build_topology(design, H)
+    jt = pl.jax_topology(topo)
+    state = pl.init_state(topo)
+
+    E = len(trace)
+    # month slicing (trace sorted by month)
+    starts = np.searchsorted(trace.month, np.arange(months))
+    ends = np.searchsorted(trace.month, np.arange(months), side="right")
+    e_max = max(1, int((ends - starts).max()))
+
+    # device-side trace columns
+    tr = {f: jnp.asarray(getattr(trace, f)) for f in
+          ("rack_kw", "n_racks", "is_gpu", "is_pod", "tier",
+           "harvest_frac", "lifetime_m", "month")}
+
+    # registry (device): where each event's racks landed
+    reg_rows = jnp.full((E, MAX_POD_RACKS), -1, jnp.int32)
+    reg_counts = jnp.zeros((E, MAX_POD_RACKS), jnp.float32)
+    placed = jnp.zeros((E,), bool)
+    harvested = jnp.zeros((E,), bool)
+    removed = jnp.zeros((E,), bool)
+
+    row_hall = jnp.asarray(topo.row_hall)
+
+    @functools.partial(jax.jit, static_argnames=())
+    def step_month(state, reg_rows, reg_counts, placed, harvested, removed,
+                   n_active, month, idx, valid, key):
+        # ---- 1. decommission expired racks ----
+        expire = placed & ~removed & (tr["month"] + tr["lifetime_m"] <= month)
+        frac_dec = jnp.where(expire,
+                             1.0 - jnp.where(harvested, tr["harvest_frac"], 0.0),
+                             0.0)
+        state = pl.release_bulk(jt, state, reg_rows, reg_counts,
+                                tr["rack_kw"], tr["is_gpu"], tr["tier"],
+                                frac_dec)
+        removed = removed | expire
+
+        # ---- 2. harvest one-year-old racks ----
+        if cfg.harvest:
+            h = placed & ~removed & ~harvested & (tr["month"] + 12 <= month)
+            state = pl.release_bulk(jt, state, reg_rows, reg_counts,
+                                    tr["rack_kw"], tr["is_gpu"], tr["tier"],
+                                    jnp.where(h, tr["harvest_frac"], 0.0))
+            harvested = harvested | h
+
+        # ---- 3. place this month's arrivals ----
+        def body(carry, i):
+            st, n_act, rr, rc, plcd = carry
+            e = idx[i]
+            dep = Deployment(tr["rack_kw"][e], tr["n_racks"][e],
+                             tr["is_gpu"][e], tr["tier"][e], tr["is_pod"][e])
+            k = jax.random.fold_in(key, i)
+
+            def attempt(n):
+                active = row_hall < n
+                return pl.place(jt, st, dep, cfg.policy, k, active)
+
+            st1, ok1, rows1, counts1 = attempt(n_act)
+
+            def retry():
+                n2 = jnp.minimum(n_act + 1, H)
+                st2, ok2, rows2, counts2 = attempt(n2)
+                return st2, ok2, rows2, counts2, n2
+
+            st_f, ok_f, rows_f, counts_f, n_f = jax.lax.cond(
+                ok1, lambda: (st1, ok1, rows1, counts1, n_act), retry)
+
+            live = valid[i]
+            ok_f = ok_f & live
+            st = pl._tree_where(ok_f, st_f, st)
+            n_act = jnp.where(live, n_f, n_act)
+            rr = rr.at[e].set(jnp.where(ok_f, rows_f, rr[e]))
+            rc = rc.at[e].set(jnp.where(ok_f, counts_f, rc[e]))
+            plcd = plcd.at[e].set(jnp.where(live, ok_f, plcd[e]))
+            return (st, n_act, rr, rc, plcd), ok_f
+
+        (state, n_active, reg_rows, reg_counts, placed), oks = jax.lax.scan(
+            body, (state, n_active, reg_rows, reg_counts, placed),
+            jnp.arange(idx.shape[0]))
+
+        hall_str = pl.hall_stranding(jt, state)
+        deployed = pl.deployed_kw(state)
+        return (state, reg_rows, reg_counts, placed, harvested, removed,
+                n_active, hall_str, deployed)
+
+    key = jax.random.PRNGKey(cfg.seed + 1)
+    n_active = jnp.asarray(1, jnp.int32)
+    act_month = np.full((H,), -1, np.int64)
+    act_month[0] = 0
+
+    out = {k: [] for k in ("halls", "mw", "p50", "p90")}
+    for m in range(months):
+        s, e = int(starts[m]), int(ends[m])
+        idx = np.arange(s, s + e_max) % E
+        valid = np.arange(s, s + e_max) < e
+        (state, reg_rows, reg_counts, placed, harvested, removed, n_active,
+         hall_str, deployed) = step_month(
+            state, reg_rows, reg_counts, placed, harvested, removed,
+            n_active, jnp.asarray(m), jnp.asarray(idx), jnp.asarray(valid),
+            jax.random.fold_in(key, m))
+        na = int(n_active)
+        newly = np.where((act_month < 0) & (np.arange(H) < na))[0]
+        act_month[newly] = m
+
+        hs = np.asarray(hall_str)
+        mature = (act_month >= 0) & (act_month <= m - cfg.mature_months)
+        vals = hs[mature] if mature.any() else hs[act_month >= 0]
+        out["halls"].append(na)
+        out["mw"].append(float(deployed) / 1e3)
+        out["p50"].append(float(np.percentile(vals, 50)))
+        out["p90"].append(float(np.percentile(vals, 90)))
+
+    hs = np.asarray(pl.hall_stranding(jt, state))
+    na = int(n_active)
+    lineups_per_hall = topo.lineups_per_hall
+    lstr = np.asarray(pl.lineup_stranding(jt, state))
+    active_lineups = np.arange(lstr.shape[0]) < na * lineups_per_hall
+    active_mask = np.asarray(topo.lineup_is_active) & active_lineups
+
+    return FleetResult(
+        months=np.arange(months),
+        halls_active=np.asarray(out["halls"]),
+        deployed_mw=np.asarray(out["mw"]),
+        p50_stranding=np.asarray(out["p50"]),
+        p90_stranding=np.asarray(out["p90"]),
+        final_hall_stranding=hs[:na],
+        final_lineup_stranding=lstr[active_mask],
+        n_halls_built=na,
+        final_deployed_mw=float(pl.deployed_kw(state)) / 1e3,
+        placed_fraction=float(jnp.mean(placed.astype(jnp.float32))),
+        design=design, env=env,
+    )

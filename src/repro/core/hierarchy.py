@@ -1,0 +1,241 @@
+"""Power-delivery hierarchy: designs, line-ups, rows, wiring (paper §2, App. C).
+
+A hall is a tree  substation → UPS line-ups → rows → racks.  We model the
+levels that bind placement: line-ups (UPS domains) and rows, plus hall-level
+liquid-cooling capacity.  Two redundancy families (paper §2.3):
+
+* distributed ``xN/y``: all x line-ups are active; each may carry HA load up
+  to (y/x)·C (Eq. 27) and must retain failover headroom Δ = P_r/(k_r−1)
+  (Eq. 1) for every HA deployment it feeds.
+* block ``N+k``: y = N primary line-ups carry load to full rating C; k
+  standby line-ups exist only for failover (they cost money but admit no
+  load), so usable capacity is quantized per line-up (Eq. 2).
+
+Row wiring follows Appendix C.2: low-density rows connect to 2 upstream
+line-ups, high-density rows to 4 (distributed) — balanced across the
+admissible combinations within a power domain; block-design rows draw from a
+single primary line-up (the reserve path is via STS and consumes no primary
+capacity).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field, replace
+from typing import Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from .resources import (AIR, AIR_CFM_PER_KW, LIQ, LIQ_LPM_PER_RACK, N_RES,
+                        POWER, TILES)
+
+MAX_FEEDS = 4
+
+
+@dataclass(frozen=True)
+class DesignSpec:
+    """A power-delivery reference design (paper Table 1 / App. C.2)."""
+    name: str
+    kind: str                    # 'distributed' | 'block'
+    n_lineups: int               # x: total UPS line-ups (incl. reserve)
+    n_active: int                # y: line-ups of supported HA load
+    lineup_kw: float = 2500.0    # 2.5 MW UPS line-up (Table 1)
+    n_domains: int = 1           # power domains partitioning the line-ups
+    ld_rows: int = 18
+    hd_rows: int = 12
+    ld_row_kw: float = 625.0     # Table 1 electrical granularity
+    hd_row_kw: float = 2500.0
+    ld_feeds: int = 2            # App. C.2 row classes
+    hd_feeds: int = 4
+    tiles_per_row: int = 24      # App. C.2
+    # Cooling provisioning (see DESIGN.md §4 — supply sizing is ours):
+    air_provision_ratio: float = 1.0
+    liq_gpu_share: float = 0.7        # design-point GPU share of HA power
+    liq_ref_rack_kw: float = 150.0    # design-point GPU rack density
+
+    @property
+    def ha_capacity_kw(self) -> float:
+        # distributed: (y/x)·x·C = y·C ; block: y primaries · C  → identical.
+        return self.n_active * self.lineup_kw
+
+    @property
+    def ha_frac(self) -> float:
+        """Effective HA fraction of a line-up's rating (Eq. 27)."""
+        if self.kind == "distributed":
+            return self.n_active / self.n_lineups
+        return 1.0
+
+    @property
+    def n_rows(self) -> int:
+        return self.ld_rows + self.hd_rows
+
+    @property
+    def hall_liq_cap_lpm(self) -> float:
+        """Liquid plant sized for `liq_gpu_share` of HA power at the
+        reference GPU rack density (2 LPM per rack)."""
+        ref_racks = self.liq_gpu_share * self.ha_capacity_kw / self.liq_ref_rack_kw
+        return ref_racks * LIQ_LPM_PER_RACK
+
+
+def _balanced_combos(n: int, r: int, count: int, offset: int = 0):
+    """Cyclically assign `count` rows over all C(n, r) feed combinations."""
+    combos = list(itertools.combinations(range(n), r))
+    return [tuple(offset + c for c in combos[i % len(combos)])
+            for i in range(count)]
+
+
+@dataclass(frozen=True)
+class HallTopology:
+    """Static (numpy) arrays describing one hall design, possibly tiled over
+    H halls with globally-indexed rows/line-ups (fleet mode)."""
+    design: DesignSpec
+    n_halls: int
+    row_cap: np.ndarray        # [R_tot, N_RES] float32
+    row_feeds: np.ndarray      # [R_tot, MAX_FEEDS] int32, -1 padded
+    row_nfeeds: np.ndarray     # [R_tot] int32
+    row_is_hd: np.ndarray      # [R_tot] bool
+    row_domain: np.ndarray     # [R_tot] int32 (global domain id)
+    row_hall: np.ndarray       # [R_tot] int32
+    lineup_cap: np.ndarray     # [X_tot] float32 (kW rating C)
+    lineup_is_active: np.ndarray  # [X_tot] bool (block reserve = False)
+    hall_liq_cap: np.ndarray   # [H] float32
+    ha_frac: float
+    is_block: bool
+
+    @property
+    def rows_per_hall(self) -> int:
+        return self.design.n_rows
+
+    @property
+    def lineups_per_hall(self) -> int:
+        return self.design.n_lineups
+
+    def ha_capacity_kw(self) -> float:
+        return self.design.ha_capacity_kw * self.n_halls
+
+
+def build_topology(design: DesignSpec, n_halls: int = 1) -> HallTopology:
+    d = design
+    if d.kind not in ("distributed", "block"):
+        raise ValueError(f"unknown design kind {d.kind!r}")
+    if d.kind == "distributed":
+        active = list(range(d.n_lineups))
+        per_dom = d.n_lineups // d.n_domains
+    else:
+        active = list(range(d.n_active))       # primaries first
+        per_dom = d.n_active // d.n_domains
+    if per_dom * d.n_domains != len(active):
+        raise ValueError("line-ups must partition evenly into domains")
+    if d.ld_rows % d.n_domains or d.hd_rows % d.n_domains:
+        raise ValueError("rows must partition evenly into domains")
+
+    ld_per_dom = d.ld_rows // d.n_domains
+    hd_per_dom = d.hd_rows // d.n_domains
+
+    feeds, nfeeds, is_hd, domain = [], [], [], []
+    for dom in range(d.n_domains):
+        off = dom * per_dom
+        if d.kind == "distributed":
+            ld = _balanced_combos(per_dom, min(d.ld_feeds, per_dom), ld_per_dom, off)
+            hd = _balanced_combos(per_dom, min(d.hd_feeds, per_dom), hd_per_dom, off)
+        else:
+            # block: one primary feed per row, round-robin within domain.
+            ld = [(off + i % per_dom,) for i in range(ld_per_dom)]
+            hd = [(off + i % per_dom,) for i in range(hd_per_dom)]
+        for combo in ld:
+            feeds.append(combo); nfeeds.append(len(combo))
+            is_hd.append(False); domain.append(dom)
+        for combo in hd:
+            feeds.append(combo); nfeeds.append(len(combo))
+            is_hd.append(True); domain.append(dom)
+
+    R = len(feeds)
+    row_feeds = np.full((R, MAX_FEEDS), -1, np.int32)
+    for i, combo in enumerate(feeds):
+        row_feeds[i, :len(combo)] = combo
+    row_nfeeds = np.asarray(nfeeds, np.int32)
+    row_is_hd = np.asarray(is_hd, bool)
+    row_domain = np.asarray(domain, np.int32)
+
+    row_kw = np.where(row_is_hd, d.hd_row_kw, d.ld_row_kw).astype(np.float32)
+    row_cap = np.zeros((R, N_RES), np.float32)
+    row_cap[:, POWER] = row_kw
+    row_cap[:, AIR] = d.air_provision_ratio * AIR_CFM_PER_KW * row_kw
+    row_cap[:, LIQ] = np.where(row_is_hd, 1e9, 0.0)   # liquid loops only in HD rows;
+    row_cap[:, TILES] = d.tiles_per_row               # the binding cap is hall-level.
+
+    lineup_cap = np.full((d.n_lineups,), d.lineup_kw, np.float32)
+    lineup_is_active = np.zeros((d.n_lineups,), bool)
+    lineup_is_active[active] = True
+
+    # --- tile over H halls with global indices ---
+    H = n_halls
+    X = d.n_lineups
+    row_feeds_g = np.concatenate(
+        [np.where(row_feeds >= 0, row_feeds + h * X, -1) for h in range(H)], 0)
+    tile = lambda a: np.concatenate([a] * H, 0)
+    topo = HallTopology(
+        design=d, n_halls=H,
+        row_cap=tile(row_cap),
+        row_feeds=row_feeds_g.astype(np.int32),
+        row_nfeeds=tile(row_nfeeds),
+        row_is_hd=tile(row_is_hd),
+        row_domain=np.concatenate(
+            [row_domain + h * d.n_domains for h in range(H)], 0).astype(np.int32),
+        row_hall=np.concatenate(
+            [np.full((R,), h, np.int32) for h in range(H)], 0),
+        lineup_cap=np.concatenate([lineup_cap] * H, 0),
+        lineup_is_active=np.concatenate([lineup_is_active] * H, 0),
+        hall_liq_cap=np.full((H,), d.hall_liq_cap_lpm, np.float32),
+        ha_frac=d.ha_frac,
+        is_block=(d.kind == "block"),
+    )
+    return topo
+
+
+# ---------------------------------------------------------------------------
+# Reference designs (paper Table 1 / §3.1 / §6.1).
+# ---------------------------------------------------------------------------
+
+def design_4n3() -> DesignSpec:
+    """4N/3 distributed-redundant, 7.5 MW HA (paper §3.1)."""
+    return DesignSpec("4N/3", "distributed", n_lineups=4, n_active=3,
+                      n_domains=1, ld_rows=18, hd_rows=12)
+
+
+def design_3p1() -> DesignSpec:
+    """3+1 block-redundant, 7.5 MW HA (paper §3.1). App. C.2 base hall:
+    6N LD + 4N HD rows with N = 3 primaries."""
+    return DesignSpec("3+1", "block", n_lineups=4, n_active=3,
+                      n_domains=1, ld_rows=18, hd_rows=12)
+
+
+def design_10n8() -> DesignSpec:
+    """10N/8 distributed, 20 MW HA.  Two domains of 5 line-ups (see
+    DESIGN.md §4 for the balanced-subset rationale): LD rows multiple of
+    C(5,2)=10 per domain, HD rows multiple of C(5,4)=5 per domain, chosen
+    to hit the 3:2 LD:HD reference ratio."""
+    return DesignSpec("10N/8", "distributed", n_lineups=10, n_active=8,
+                      n_domains=2, ld_rows=60, hd_rows=40)
+
+
+def design_8p2() -> DesignSpec:
+    """8+2 block-redundant, 20 MW HA.  App. C.2 base hall: 6N LD + 4N HD
+    with N = 8 primaries."""
+    return DesignSpec("8+2", "block", n_lineups=10, n_active=8,
+                      n_domains=2, ld_rows=48, hd_rows=32)
+
+
+DESIGNS = {
+    "4N/3": design_4n3,
+    "3+1": design_3p1,
+    "10N/8": design_10n8,
+    "8+2": design_8p2,
+}
+
+
+def get_design(name: str) -> DesignSpec:
+    try:
+        return DESIGNS[name]()
+    except KeyError:
+        raise KeyError(f"unknown design {name!r}; have {list(DESIGNS)}")

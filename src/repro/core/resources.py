@@ -1,0 +1,47 @@
+"""Multi-resource demand vectors (paper §4.1, Appendix C.1).
+
+Each deployment unit r carries a demand vector
+    d_r = (P_r [kW], CFM_r [air], LPM_r [liquid], n_r [tiles])
+Cooling demand is derived from rack power with the paper's fixed
+conversions: 165 CFM/kW for air cooling and 2 LPM per rack for
+direct-to-chip liquid cooling (OCP guideline, paper §4.1).
+
+GPU racks split cooling: the accelerator share is liquid-cooled, while
+networking/overhead (``GPU_AIR_FRACTION`` of rack power) remains
+air-cooled.  General-compute and storage racks have LPM_r = 0.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Resource dimension indices (paper §4.3: m ∈ {power, air, liquid, space}).
+POWER, AIR, LIQ, TILES = 0, 1, 2, 3
+N_RES = 4
+RESOURCE_NAMES = ("power_kw", "air_cfm", "liquid_lpm", "tiles")
+
+# Fixed conversions (paper §4.1, [OCP'23]).
+AIR_CFM_PER_KW = 165.0
+LIQ_LPM_PER_RACK = 2.0
+# Fraction of a GPU rack's power that is air-cooled (networking, misc).
+GPU_AIR_FRACTION = 0.10
+
+# Hardware classes (paper §5.1).
+CLASS_GPU, CLASS_COMPUTE, CLASS_STORAGE = 0, 1, 2
+CLASS_NAMES = ("gpu", "compute", "storage")
+
+# Availability tiers (paper §4.1).
+TIER_HA, TIER_LA = 0, 1
+
+
+def rack_demand(rack_kw, is_gpu):
+    """Per-rack demand vector d_r = (kW, CFM, LPM, tiles).
+
+    Works on scalars or arrays (broadcasts); returns shape (..., 4).
+    """
+    rack_kw = jnp.asarray(rack_kw, jnp.float32)
+    is_gpu = jnp.asarray(is_gpu)
+    air_frac = jnp.where(is_gpu, GPU_AIR_FRACTION, 1.0)
+    air = AIR_CFM_PER_KW * rack_kw * air_frac
+    liq = jnp.where(is_gpu, LIQ_LPM_PER_RACK, 0.0)
+    tiles = jnp.ones_like(rack_kw)
+    return jnp.stack([rack_kw, air, liq, tiles], axis=-1)

@@ -1,0 +1,167 @@
+"""Single-hall Monte Carlo simulator (paper §4.4).
+
+Each trial: instantiate one hall, place arrivals until SATURATION_FAILS
+consecutive placements fail, apply harvesting, resume placement until
+another SATURATION_FAILS consecutive failures.  Trials are vmapped; the
+event loop is a `lax.scan` over a pre-generated arrival trace.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import arrivals, placement as pl
+from .hierarchy import DesignSpec, build_topology
+from .placement import (DEFAULT_POLICY, Deployment, HallState, JaxTopology,
+                        MAX_POD_RACKS)
+
+SATURATION_FAILS = 100
+
+
+class TraceArrays(NamedTuple):
+    """Device-side trace columns (one entry per event)."""
+    rack_kw: jax.Array
+    n_racks: jax.Array
+    is_gpu: jax.Array
+    is_pod: jax.Array
+    tier: jax.Array
+    harvest_frac: jax.Array
+
+    @staticmethod
+    def from_trace(t: arrivals.Trace) -> "TraceArrays":
+        return TraceArrays(
+            jnp.asarray(t.rack_kw), jnp.asarray(t.n_racks),
+            jnp.asarray(t.is_gpu), jnp.asarray(t.is_pod),
+            jnp.asarray(t.tier), jnp.asarray(t.harvest_frac))
+
+    def event(self, i) -> Deployment:
+        return Deployment(self.rack_kw[i], self.n_racks[i], self.is_gpu[i],
+                          self.tier[i], self.is_pod[i])
+
+
+class TrialResult(NamedTuple):
+    state: HallState
+    placed: jax.Array          # [E] bool
+    rows: jax.Array            # [E, MAX_POD_RACKS]
+    counts: jax.Array          # [E, MAX_POD_RACKS]
+    saturated: jax.Array       # [] bool — phase ended in saturation
+
+
+def _fill_phase(jt: JaxTopology, state: HallState, trace: TraceArrays,
+                policy, key) -> TrialResult:
+    E = trace.rack_kw.shape[0]
+
+    def body(carry, i):
+        st, streak = carry
+        frozen = streak >= SATURATION_FAILS
+        dep = trace.event(i)
+        k = jax.random.fold_in(key, i)
+        st2, ok, rows, counts = pl.place(jt, st, dep, policy, k)
+        ok = ok & ~frozen
+        st = pl._tree_where(ok, st2, st)
+        rows = jnp.where(ok, rows, -1)
+        counts = jnp.where(ok, counts, 0.0)
+        streak = jnp.where(ok, 0, streak + 1)
+        return (st, streak), (ok, rows, counts)
+
+    (state, streak), (placed, rows, counts) = jax.lax.scan(
+        body, (state, jnp.zeros((), jnp.int32)), jnp.arange(E))
+    return TrialResult(state, placed, rows, counts,
+                       streak >= SATURATION_FAILS)
+
+
+def _apply_harvest(jt: JaxTopology, res: TrialResult,
+                   trace: TraceArrays) -> HallState:
+    """Harvest every placed rack by its class ceiling (paper §5.2)."""
+    frac = jnp.where(res.placed, trace.harvest_frac, 0.0)
+    return pl.release_bulk(jt, res.state, res.rows, res.counts,
+                           trace.rack_kw, trace.is_gpu, trace.tier, frac)
+
+
+def run_trial(jt: JaxTopology, topo_init: HallState,
+              trace_a: TraceArrays, trace_b: TraceArrays,
+              policy, key, harvest: bool = True):
+    """One MC trial: fill → harvest → refill.  Returns final state and the
+    two phase results."""
+    ka, kb = jax.random.split(key)
+    res_a = _fill_phase(jt, topo_init, trace_a, policy, ka)
+    state = jax.lax.cond(jnp.asarray(harvest),
+                         lambda: _apply_harvest(jt, res_a, trace_a),
+                         lambda: res_a.state)
+    res_b = _fill_phase(jt, state, trace_b, policy, kb)
+    return res_b.state, res_a, res_b
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "harvest"))
+def _run_trials(jt, init, ta, tb, keys, policy, harvest):
+    """Vmapped trials; jit-cached across same-shaped topologies/traces so
+    parameter sweeps (Fig. 6) compile once."""
+    return jax.vmap(lambda t_a, t_b, k: run_trial(jt, init, t_a, t_b,
+                                                  policy, k, harvest)
+                    )(ta, tb, keys)
+
+
+def monte_carlo(design: DesignSpec, n_trials: int = 32, n_events: int = 600,
+                policy: int = DEFAULT_POLICY, seed: int = 0,
+                year: int = 2028, scenario: str = "med",
+                gpu_power_share: float = 0.6, pod_racks: int = 1,
+                quantum_racks: int = 10, harvest: bool = True,
+                sku_kw_override: float | None = None,
+                single_sku_gpu: bool = False):
+    """Run `n_trials` single-hall MC trials.  Returns dict of metrics.
+
+    `single_sku_gpu` + `sku_kw_override` reproduce the paper's Fig. 6
+    single-SKU sweep (repeated identical GPU deployments until saturation).
+    """
+    topo = build_topology(design)
+    jt = pl.jax_topology(topo)
+    init = pl.init_state(topo)
+
+    tas, tbs = [], []
+    for i in range(n_trials):
+        if single_sku_gpu:
+            t = arrivals.sample_mixed_trace(n_events, year, scenario,
+                                            seed + 7919 * i, 1.0,
+                                            pod_racks, quantum_racks)
+            t.rack_kw[:] = sku_kw_override
+            t.class_id[:] = 0
+            t.is_gpu[:] = True
+        else:
+            t = arrivals.sample_mixed_trace(n_events, year, scenario,
+                                            seed + 7919 * i, gpu_power_share,
+                                            pod_racks, quantum_racks)
+            if sku_kw_override is not None:
+                t.rack_kw[t.is_gpu] = sku_kw_override
+        tas.append(t)
+        tbs.append(arrivals.sample_mixed_trace(
+            max(200, n_events // 3), year, scenario, seed + 7919 * i + 1,
+            1.0 if single_sku_gpu else gpu_power_share, pod_racks,
+            quantum_racks))
+        if single_sku_gpu:
+            tbs[-1].rack_kw[:] = sku_kw_override
+            tbs[-1].is_gpu[:] = True
+
+    stack = lambda ts: jax.tree.map(lambda *xs: jnp.stack(xs),
+                                    *[TraceArrays.from_trace(t) for t in ts])
+    ta, tb = stack(tas), stack(tbs)
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_trials)
+
+    state, res_a, res_b = _run_trials(jt, init, ta, tb, keys, policy,
+                                      harvest)
+
+    lineup_str = jax.vmap(lambda s: pl.lineup_stranding(jt, s))(state)
+    hall_str = jax.vmap(lambda s: pl.hall_stranding(jt, s))(state)[:, 0]
+    deployed = jax.vmap(pl.deployed_kw)(state)
+    return {
+        "lineup_stranding": np.asarray(lineup_str),   # [T, X]
+        "hall_stranding": np.asarray(hall_str),       # [T]
+        "deployed_kw": np.asarray(deployed),          # [T]
+        "ha_capacity_kw": design.ha_capacity_kw,
+        "saturated": np.asarray(res_b.saturated),
+        "placed_a": np.asarray(res_a.placed),
+        "placed_b": np.asarray(res_b.placed),
+    }

@@ -1,0 +1,273 @@
+"""MoE inference throughput model (paper §5.4, Appendix A).
+
+Three-resource min-bottleneck model per phase (Eq. 5):
+    TPS^φ(m, D) = min( F_D / C^φ(m),  B_D^HBM / M^φ(m),  1 / T_comm^φ(m,D) )
+with per-token compute/memory costs (Eqs. 6–9), TP/EP communication
+(Eqs. 10–16) under the HBM-residency locality model (Eqs. 12–13), and
+request-level aggregation (Eq. 17; see DESIGN.md §4 for the dimensional
+reading we implement).
+
+All functions are jnp-traceable so grids of (model × deployment × year)
+evaluate via vmap.  `CostScale` lets `core.calibration` replace the
+first-order analytic coefficients with HLO-measured ones (beyond-paper).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import projections as proj
+
+# Serving conventions (App. A.1): FP8 weights, FP4 activations/KV, B=256.
+B_W = 1.0          # bytes / weight
+B_ACT = 0.5        # bytes / activation element
+B_KV = 0.5         # bytes / KV element
+BATCH = 256
+ALPHA_HBM = 0.7    # usable HBM fraction (Eq. 12)
+
+
+@dataclass(frozen=True)
+class MoEModel:
+    """Appendix A.5, Table 2."""
+    name: str
+    L: int
+    w: int
+    E: int
+    K: int = 2
+    S: int = 1024          # evaluation context (= prompt) length
+
+    @property
+    def FF(self) -> int:
+        return 4 * self.w
+
+    @property
+    def w_total_bytes(self) -> float:
+        # all experts + shared attention:  L(4w² + E·2·w·FF)·b_w
+        return self.L * (4 * self.w ** 2 + self.E * 2 * self.w * self.FF) * B_W
+
+    @property
+    def w_active_bytes(self) -> float:
+        return self.L * (4 * self.w ** 2 + self.K * 2 * self.w * self.FF) * B_W
+
+
+# Table 2 model suite (0.6T – 401T nominal).
+MODEL_SUITE = (
+    MoEModel("MoE-0.6T", 48, 6144, 64),
+    MoEModel("MoE-5T", 96, 8192, 96),
+    MoEModel("MoE-19T", 120, 12288, 128),
+    MoEModel("MoE-51T", 120, 14336, 256),
+    MoEModel("MoE-132T", 120, 16384, 512),
+    MoEModel("MoE-401T", 144, 18432, 1024),
+)
+MODELS = {m.name: m for m in MODEL_SUITE}
+
+
+@dataclass(frozen=True)
+class Deployment:
+    """A rack- or pod-scale accelerator deployment (App. B.1/B.2).
+
+    Locality semantics (§6.5 / DESIGN.md §4): a *pod* deployment
+    (`pod_fabric=True`, n_racks>1) exposes its constituent racks as one
+    local high-bandwidth domain ("shared low-latency pod fabric", §5.2);
+    rack-scale deployments keep Eq. 24's per-rack NVLink domain.  When a
+    model needs more domains than the deployment provides, serving spans
+    `n_units ≥ n_racks` co-scheduled units over the scale-out fabric.
+    """
+    arch: proj.DeploymentArch
+    year: int
+    n_racks: int = 1            # pod size (1 = rack-scale)
+    scenario: str = proj.MED
+    pod_fabric: bool = True     # pods form one local domain (§6.5)
+    incast_penalty: bool = True  # remote EP shares B_IB across domain pairs
+
+    @property
+    def line(self) -> str:
+        return "kyber" if self.arch is proj.KYBER else "oberon"
+
+    @property
+    def perf(self):
+        return proj.pkg_perf(self.year, self.line)
+
+    @property
+    def domain_pkgs(self) -> int:
+        """Packages per local high-bandwidth domain."""
+        if self.pod_fabric and self.n_racks > 1:
+            return self.arch.nvl_domain_pkgs * self.n_racks
+        return self.arch.nvl_domain_pkgs
+
+    def n_units(self, m: "MoEModel") -> int:
+        """Racks/pods co-scheduled so the model fits in HBM (≥ n_racks)."""
+        usable_per_rack = ALPHA_HBM * self.arch.n_pkg * self.hbm_pkg_bytes
+        need = int(np.ceil(m.w_total_bytes / usable_per_rack))
+        return max(self.n_racks, need)
+
+    def n_pkg(self, m: "MoEModel") -> int:
+        return self.arch.n_pkg * self.n_units(m)
+
+    def f_flops(self, m: "MoEModel") -> float:      # Eq. 20 (FLOP/s)
+        return self.n_pkg(m) * self.perf["flops_pf"] * 1e15
+
+    def b_hbm(self, m: "MoEModel") -> float:        # Eq. 21 (bytes/s)
+        return self.n_pkg(m) * self.perf["hbm_bw_tbps"] * 1e12
+
+    @property
+    def hbm_pkg_bytes(self) -> float:
+        return self.perf["hbm_gb"] * 1e9
+
+    @property
+    def b_nvl(self) -> float:                        # per-domain (bytes/s)
+        bw = self.arch.b_nvl_tbps * 1e12
+        if self.pod_fabric and self.n_racks > 1:
+            bw *= self.n_racks                       # pod fabric spine
+        return bw
+
+    def b_ib(self, m: "MoEModel") -> float:          # aggregate (bytes/s)
+        return self.arch.b_ib_tbps * 1e12 * self.n_units(m)
+
+    @property
+    def tp_degree(self) -> int:                      # T_D
+        return self.arch.nvl_domain_pkgs
+
+    def power_w(self, m: "MoEModel" = None) -> float:   # Eq. 25
+        rack_kw = proj.gpu_rack_kw(self.year, self.scenario,
+                                   pod_scale=self.arch is proj.KYBER)
+        n = self.n_racks if m is None else self.n_units(m)
+        return rack_kw * n * 1e3
+
+
+class CostScale(NamedTuple):
+    """Multipliers applied to the analytic per-token costs — identity by
+    default; `core.calibration` sets these from compiled-HLO measurements."""
+    compute: float = 1.0
+    memory: float = 1.0
+    comm: float = 1.0
+
+
+IDENT = CostScale()
+
+
+# --- per-token costs (Eqs. 6–11) ---
+
+def c_prefill(m: MoEModel, s_p):                  # Eq. 6 (FLOPs/token)
+    s_p = jnp.asarray(s_p, jnp.float64) if hasattr(s_p, "shape") else float(s_p)
+    return float(m.L) * (4.0 * m.K * m.w * m.FF + 4.0 * m.w ** 2
+                         + 2.0 * m.w * s_p)
+
+
+def c_decode(m: MoEModel, t):                     # Eq. 7
+    t = jnp.asarray(t, jnp.float32)
+    return float(m.L) * (4.0 * m.K * m.w * m.FF + 4.0 * m.w ** 2
+                         + 2.0 * m.w * t)
+
+
+def m_prefill(m: MoEModel, s_p, batch=BATCH):     # Eq. 8 (bytes/token)
+    return m.w_total_bytes / (batch * s_p) + 2 * m.L * m.w * B_KV
+
+
+def m_decode(m: MoEModel, t, batch=BATCH):        # Eq. 9
+    t = jnp.asarray(t, jnp.float32)
+    return m.w_active_bytes / batch + 2.0 * m.L * m.w * (t + 1.0) * B_KV
+
+
+def n_tp(m: MoEModel, t_d):                       # Eq. 10 (bytes/token)
+    return m.L * 2 * (t_d - 1) / t_d * m.w * B_ACT
+
+
+def n_ep(m: MoEModel):                            # Eq. 11
+    return 2 * m.L * m.K * m.w * B_ACT
+
+
+# --- locality model (Eqs. 12–16) ---
+
+def n_domains(m: MoEModel, d: Deployment):        # Eq. 12
+    usable = ALPHA_HBM * d.domain_pkgs * d.hbm_pkg_bytes
+    return int(np.ceil(m.w_total_bytes / usable))
+
+
+def f_ib(m: MoEModel, d: Deployment):             # Eq. 13
+    nd = n_domains(m, d)
+    return 0.0 if nd == 1 else 1.0 - 1.0 / nd
+
+
+def t_comm(m: MoEModel, d: Deployment, scale: CostScale = IDENT):
+    tp = n_tp(m, d.tp_degree) / d.b_nvl                      # Eq. 14
+    f = f_ib(m, d)
+    nd = n_domains(m, d)
+    b_ib = d.b_ib(m)
+    if d.incast_penalty and nd > 1:
+        b_ib = b_ib / nd       # per-domain-pair share of the scale-out fabric
+    ep = max((1 - f) * n_ep(m) / d.b_nvl,                    # Eq. 15
+             f * n_ep(m) / b_ib if f > 0 else 0.0)
+    return scale.comm * (tp + ep)                            # Eq. 16
+
+
+# --- phase & request throughput (Eqs. 5, 17, 18) ---
+# `mode="min"` is Eq. 5 as printed (full overlap: slowest resource binds).
+# `mode="additive"` follows limitation A.4(3) — no overlap between comm and
+# compute/memory: T_token = max(T_compute, T_memory) + T_comm.  The additive
+# mode is the default for the §6.5 pod study (see DESIGN.md §4).
+DEFAULT_MODE = "additive"
+
+
+def _combine(t_comp, t_mem, t_cm, mode):
+    if mode == "min":
+        return 1.0 / jnp.maximum(jnp.maximum(t_comp, t_mem), t_cm)
+    return 1.0 / (jnp.maximum(t_comp, t_mem) + t_cm)
+
+
+def tps_prefill(m: MoEModel, d: Deployment, s_p=None,
+                scale: CostScale = IDENT, batch=BATCH, mode=DEFAULT_MODE):
+    s_p = m.S if s_p is None else s_p
+    t_comp = scale.compute * c_prefill(m, s_p) / d.f_flops(m)
+    t_mem = scale.memory * m_prefill(m, s_p, batch) / d.b_hbm(m)
+    return float(_combine(t_comp, t_mem, t_comm(m, d, scale), mode))
+
+
+def tps_decode(m: MoEModel, d: Deployment, t,
+               scale: CostScale = IDENT, batch=BATCH, mode=DEFAULT_MODE):
+    t_comp = scale.compute * c_decode(m, t) / d.f_flops(m)
+    t_mem = scale.memory * m_decode(m, t, batch) / d.b_hbm(m)
+    return _combine(t_comp, t_mem, t_comm(m, d, scale), mode)
+
+
+def t_kv_transfer(m: MoEModel, s_p, b_transfer):  # Eq. 18
+    return 2 * m.L * m.w * s_p * B_KV / b_transfer
+
+
+def tps_request(m: MoEModel, d: Deployment, s_out: int = 256,
+                scale: CostScale = IDENT, batch=BATCH, mode=DEFAULT_MODE):
+    """Request-level throughput (Eq. 17, dimensional reading per DESIGN.md):
+    T_total = B·S_p/TPS_pre + Σ_t B/TPS_dec(t) + T_KV;
+    TPS_req = B·S_out / T_total   [tokens/s]."""
+    s_p = m.S
+    t_pre = batch * s_p / tps_prefill(m, d, s_p, scale, batch, mode)
+    ts = jnp.arange(s_p + 1, s_p + s_out + 1)
+    t_dec = jnp.sum(batch / tps_decode(m, d, ts, scale, batch, mode))
+    t_kv = t_kv_transfer(m, s_p, d.b_ib(m))
+    return batch * s_out / (t_pre + t_dec + t_kv)
+
+
+def tps_per_watt(m: MoEModel, d: Deployment, s_out: int = 256,
+                 scale: CostScale = IDENT, mode=DEFAULT_MODE):
+    return float(tps_request(m, d, s_out, scale, mode=mode)) / d.power_w(m)
+
+
+def bottleneck(m: MoEModel, d: Deployment, phase: str = "dec", t: int = 1024,
+               scale: CostScale = IDENT):
+    """Which of the three terms binds (for analysis/plots)."""
+    if phase == "pre":
+        terms = {
+            "compute": float(scale.compute * c_prefill(m, m.S)) / d.f_flops(m),
+            "memory": float(scale.memory * m_prefill(m, m.S)) / d.b_hbm(m),
+            "comm": t_comm(m, d, scale),
+        }
+    else:
+        terms = {
+            "compute": float(scale.compute * c_decode(m, t)) / d.f_flops(m),
+            "memory": float(scale.memory * m_decode(m, t)) / d.b_hbm(m),
+            "comm": t_comm(m, d, scale),
+        }
+    return max(terms, key=terms.get), terms

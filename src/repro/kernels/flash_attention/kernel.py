@@ -1,0 +1,102 @@
+"""Flash-attention Pallas TPU kernel.
+
+Grid (B, H, nq, nk) — the innermost axis walks KV blocks while VMEM
+scratch carries the online-softmax state (m, l, acc); output is written on
+the last KV block.  GQA is handled in the k/v index maps (h → h//G), so
+K/V are never materialized per-query-head.  Block shapes are explicit
+`BlockSpec`s; matmul dims should be multiples of 128 for the MXU (the
+wrapper pads).
+
+Target: TPU (HBM→VMEM tiling).  Validated on CPU via interpret=True
+against `ref.reference_attention`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, kv_len: int,
+                  block_q: int, block_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [bq, hd]
+    k = k_ref[0, 0].astype(jnp.float32)                  # [bk, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [bq,bk]
+    rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = cols < kv_len
+    if causal:
+        mask = mask & (rows >= cols)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True, kv_len: int,
+                         block_q: int = 128, block_k: int = 128,
+                         interpret: bool = False):
+    """q: [B,H,Sq,hd]; k,v: [B,Hk,Skv,hd] (Sq, Skv already padded to block
+    multiples; `kv_len` masks the padding)."""
+    B, H, Sq, hd = q.shape
+    Hk, Skv = k.shape[1], k.shape[2]
+    G = H // Hk
+    nq, nk = Sq // block_q, Skv // block_k
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, kv_len=kv_len,
+        block_q=block_q, block_k=block_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, qi, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, qi, ki: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # m
+            pltpu.VMEM((block_q,), jnp.float32),      # l
+            pltpu.VMEM((block_q, hd), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,36 @@
+"""Jitted wrapper: BSHD layout, padding to block multiples, GQA."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhsd
+
+
+def _pad_to(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: [B,S,H,hd]; k,v: [B,S,Hk,hd] (model layout).  Returns [B,S,H,hd]."""
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, max(8, 1 << (Sq - 1).bit_length()))
+    bk = min(block_k, max(8, 1 << (Skv - 1).bit_length()))
+    qt = _pad_to(jnp.swapaxes(q, 1, 2), 2, bq)
+    kt = _pad_to(jnp.swapaxes(k, 1, 2), 2, bk)
+    vt = _pad_to(jnp.swapaxes(v, 1, 2), 2, bk)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, kv_len=Skv,
+                               block_q=bq, block_k=bk, interpret=interpret)
+    return jnp.swapaxes(out[:, :, :Sq], 1, 2)

@@ -1,0 +1,58 @@
+"""Fused MoE router Pallas TPU kernel: softmax → top-k → renormalize.
+
+One fused VMEM pass per token block: avoids materializing the [N, E]
+softmax + separate top-k sweeps on HBM.  k is static and small (≤ 8 for
+the assigned archs), so top-k is an unrolled iterative argmax.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _gating_kernel(logits_ref, gate_ref, idx_ref, *, top_k: int):
+    logits = logits_ref[...].astype(jnp.float32)          # [bn, E]
+    m = logits.max(axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    probs = p / p.sum(axis=-1, keepdims=True)
+
+    remaining = probs
+    total = jnp.zeros((probs.shape[0],), jnp.float32)
+    gates, idxs = [], []
+    for _ in range(top_k):
+        g = remaining.max(axis=-1)
+        i = jnp.argmax(remaining, axis=-1).astype(jnp.int32)
+        gates.append(g)
+        idxs.append(i)
+        total = total + g
+        remaining = jnp.where(
+            jax.lax.broadcasted_iota(jnp.int32, remaining.shape, 1)
+            == i[:, None], NEG_INF, remaining)
+    gate = jnp.stack(gates, axis=-1) / jnp.maximum(total, 1e-9)[:, None]
+    gate_ref[...] = gate.astype(gate_ref.dtype)
+    idx_ref[...] = jnp.stack(idxs, axis=-1)
+
+
+def gating_topk(logits, top_k: int, block_n: int = 256,
+                interpret: bool = False):
+    """logits: [N, E] → (gate [N,k] f32 renormalized, idx [N,k] int32)."""
+    N, E = logits.shape
+    bn = min(block_n, N)
+    while N % bn:
+        bn //= 2
+    kernel = functools.partial(_gating_kernel, top_k=top_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(N // bn,),
+        in_specs=[pl.BlockSpec((bn, E), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((bn, top_k), lambda i: (i, 0)),
+                   pl.BlockSpec((bn, top_k), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((N, top_k), jnp.float32),
+                   jax.ShapeDtypeStruct((N, top_k), jnp.int32)],
+        interpret=interpret,
+    )(logits)

@@ -1,0 +1,24 @@
+"""Jitted wrapper for the fused gating kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import gating_topk
+
+
+@functools.partial(jax.jit, static_argnames=("top_k", "block_n", "interpret"))
+def fused_gating(logits, top_k: int, block_n: int = 256,
+                 interpret: bool = False):
+    N, E = logits.shape
+    pad = 0
+    if N % max(1, min(block_n, N)):
+        bn = min(block_n, N)
+        pad = (-N) % bn
+        logits = jnp.pad(logits, ((0, pad), (0, 0)))
+    gate, idx = gating_topk(logits, top_k, block_n, interpret)
+    if pad:
+        gate, idx = gate[:N], idx[:N]
+    return gate, idx

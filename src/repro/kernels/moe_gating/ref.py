@@ -1,0 +1,12 @@
+"""Oracle: jax.nn.softmax + lax.top_k + renormalize."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_gating(logits, top_k: int):
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate, idx = jax.lax.top_k(probs, top_k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    return gate, idx.astype(jnp.int32)

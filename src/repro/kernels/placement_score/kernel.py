@@ -1,0 +1,75 @@
+"""Placement feasibility + variance-min scoring Pallas TPU kernel.
+
+The single-hall Monte Carlo study (paper §4.4) evaluates, for every
+candidate row, the distributed-redundancy admission condition (Eq. 1/27)
+and the variance-minimization score — across thousands of vmapped trials.
+This kernel fuses the per-row feed gathers, headroom checks and score
+reduction into one VMEM pass over row blocks.
+
+Inputs are pre-gathered per row (loads/caps per feed, padded with
+`valid=0`): the gather itself is XLA's job; the kernel owns the dense
+math.  Scalars (deployment power P, ha_frac) arrive as a small params
+vector broadcast to every block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 1e30
+
+
+def _score_kernel(loads_ref, caps_ref, valid_ref, nf_ref, row_load_ref,
+                  row_cap_ref, params_ref, feas_ref, score_ref):
+    loads = loads_ref[...].astype(jnp.float32)     # [bR, F]
+    caps = caps_ref[...].astype(jnp.float32)
+    valid = valid_ref[...].astype(jnp.float32)
+    nf = nf_ref[...].astype(jnp.float32)           # [bR]
+    row_load = row_load_ref[...].astype(jnp.float32)
+    row_cap = row_cap_ref[...].astype(jnp.float32)
+    p_dep = params_ref[0]
+    ha_frac = params_ref[1]
+
+    delta = p_dep / jnp.maximum(nf - 1.0, 1.0)     # Eq. 1
+    head_ok = loads + delta[:, None] <= ha_frac * caps + 1e-4
+    power_ok = jnp.min(jnp.where(valid > 0, head_ok.astype(jnp.float32),
+                                 1.0), axis=-1)
+    fits = (row_load + p_dep <= row_cap + 1e-4).astype(jnp.float32)
+    feas = power_ok * fits
+
+    s = (p_dep / jnp.maximum(nf, 1.0))[:, None] / jnp.maximum(caps, 1.0)
+    lhat = loads / jnp.maximum(caps, 1.0)
+    var = jnp.sum(valid * (2.0 * lhat * s + s * s), axis=-1)
+    feas_ref[...] = feas
+    score_ref[...] = jnp.where(feas > 0, var, BIG)
+
+
+def placement_score(loads, caps, valid, nf, row_load, row_cap, params,
+                    block_r: int = 128, interpret: bool = False):
+    """loads/caps/valid: [R, F]; nf/row_load/row_cap: [R]; params: [2]
+    (P_dep, ha_frac).  Returns (feas [R] f32 0/1, score [R] f32)."""
+    R, F = loads.shape
+    bR = min(block_r, R)
+    while R % bR:
+        bR //= 2
+    return pl.pallas_call(
+        _score_kernel,
+        grid=(R // bR,),
+        in_specs=[
+            pl.BlockSpec((bR, F), lambda i: (i, 0)),
+            pl.BlockSpec((bR, F), lambda i: (i, 0)),
+            pl.BlockSpec((bR, F), lambda i: (i, 0)),
+            pl.BlockSpec((bR,), lambda i: (i,)),
+            pl.BlockSpec((bR,), lambda i: (i,)),
+            pl.BlockSpec((bR,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=[pl.BlockSpec((bR,), lambda i: (i,)),
+                   pl.BlockSpec((bR,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((R,), jnp.float32),
+                   jax.ShapeDtypeStruct((R,), jnp.float32)],
+        interpret=interpret,
+    )(loads, caps, valid, nf, row_load, row_cap, params)

@@ -1,0 +1,27 @@
+"""Jitted wrapper: builds kernel inputs from a placement state."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import placement_score
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def score_rows(jt_row_feeds, jt_row_nfeeds, jt_row_cap_kw, lineup_ha,
+               lineup_cap, row_load_kw, p_dep, ha_frac,
+               block_r: int = 128, interpret: bool = False):
+    """Gathers per-feed line-up state and runs the kernel.
+    Returns (feas [R] bool, score [R])."""
+    valid = (jt_row_feeds >= 0).astype(jnp.float32)
+    safe = jnp.where(jt_row_feeds >= 0, jt_row_feeds, 0)
+    loads = lineup_ha[safe]
+    caps = lineup_cap[safe]
+    params = jnp.stack([jnp.asarray(p_dep, jnp.float32),
+                        jnp.asarray(ha_frac, jnp.float32)])
+    feas, score = placement_score(
+        loads, caps, valid, jt_row_nfeeds, row_load_kw, jt_row_cap_kw,
+        params, block_r=block_r, interpret=interpret)
+    return feas > 0, score

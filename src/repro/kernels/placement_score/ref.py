@@ -1,0 +1,25 @@
+"""Oracle for the placement-score kernel (mirrors core.placement math)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BIG = 1e30
+
+
+def reference_score(loads, caps, valid, nf, row_load, row_cap, params):
+    loads = loads.astype(jnp.float32)
+    caps = caps.astype(jnp.float32)
+    valid = valid.astype(jnp.float32)
+    nf = nf.astype(jnp.float32)
+    p_dep, ha_frac = params[0], params[1]
+
+    delta = p_dep / jnp.maximum(nf - 1.0, 1.0)
+    head_ok = loads + delta[:, None] <= ha_frac * caps + 1e-4
+    power_ok = jnp.all(head_ok | (valid <= 0), axis=-1)
+    fits = row_load + p_dep <= row_cap + 1e-4
+    feas = (power_ok & fits).astype(jnp.float32)
+
+    s = (p_dep / jnp.maximum(nf, 1.0))[:, None] / jnp.maximum(caps, 1.0)
+    lhat = loads / jnp.maximum(caps, 1.0)
+    var = jnp.sum(valid * (2.0 * lhat * s + s * s), axis=-1)
+    return feas, jnp.where(feas > 0, var, BIG)

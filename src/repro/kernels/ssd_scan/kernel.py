@@ -1,0 +1,88 @@
+"""Mamba2 SSD intra-chunk Pallas TPU kernel.
+
+Computes, per (batch, chunk, head-block) grid cell, the chunk-local SSD
+quantities on the MXU:
+    y_intra[q] = Σ_{k≤q} (C_q·B_k) · e^{A_q−A_k} · xdt_k
+    h_chunk    = Σ_k e^{A_Q−A_k} · B_k ⊗ xdt_k       (chunk state summary)
+    a_chunk    = e^{A_Q}                              (chunk decay)
+The cheap inter-chunk recurrence over `h_chunk` runs outside (ops.py),
+matching the SSD decomposition (DESIGN.md §3 TPU adaptation).
+
+Block shapes: chunk Q × head-block HB × head-dim hd tiles sized for VMEM
+(decay tensor is [Q, Q, HB] f32 — keep Q·Q·HB ≲ 2M elements).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(xdt_ref, loga_ref, b_ref, c_ref, y_ref, h_ref, a_ref):
+    xdt = xdt_ref[0].astype(jnp.float32)       # [Q, HB, hd]
+    loga = loga_ref[0].astype(jnp.float32)     # [Q, HB]
+    b = b_ref[0].astype(jnp.float32)           # [Q, st]
+    c = c_ref[0].astype(jnp.float32)           # [Q, st]
+
+    acum = jnp.cumsum(loga, axis=0)            # [Q, HB]
+    s_qk = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # [Q,Q]
+    gap = acum[:, None, :] - acum[None, :, :]  # [Q, Q, HB]
+    Q = xdt.shape[0]
+    causal = (jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >=
+              jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1))
+    # mask before exp (future-side gap is large-positive; inf·0 ⇒ NaN in
+    # the vjp) — mirrors the jnp oracle
+    decay = jnp.exp(jnp.where(causal[:, :, None], gap, -1e9))
+    w = s_qk[:, :, None] * decay               # [Q, Q, HB]
+    y = jnp.einsum("qkh,khd->qhd", w, xdt,
+                   preferred_element_type=jnp.float32)
+
+    tail = jnp.exp(acum[-1:, :] - acum)        # [Q, HB]
+    h = jnp.einsum("kh,ks,khd->hds", tail, b, xdt,
+                   preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+    h_ref[0, 0] = h
+    a_ref[0, 0] = jnp.exp(acum[-1])
+
+
+def ssd_intra_chunk(xdt, log_a, b, c, *, chunk: int, head_block: int = 8,
+                    interpret: bool = False):
+    """xdt: [B,S,nh,hd]; log_a: [B,S,nh]; b,c: [B,S,st].  S = nC·chunk.
+    Returns (y_intra [B,S,nh,hd] f32, h_chunk [B,nC,nh,hd,st] f32,
+    a_chunk [B,nC,nh] f32)."""
+    B, S, nh, hd = xdt.shape
+    st = b.shape[-1]
+    Q = chunk
+    nC = S // Q
+    hb = min(head_block, nh)
+    while nh % hb:
+        hb //= 2
+    nH = nh // hb
+
+    grid = (B, nC, nH)
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, hb, hd), lambda bi, ci, hi: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, Q, hb), lambda bi, ci, hi: (bi, ci, hi)),
+            pl.BlockSpec((1, Q, st), lambda bi, ci, hi: (bi, ci, 0)),
+            pl.BlockSpec((1, Q, st), lambda bi, ci, hi: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, hb, hd), lambda bi, ci, hi: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, hb, hd, st),
+                         lambda bi, ci, hi: (bi, ci, hi, 0, 0)),
+            pl.BlockSpec((1, 1, hb), lambda bi, ci, hi: (bi, ci, hi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, nh, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, nC, nh, hd, st), jnp.float32),
+            jax.ShapeDtypeStruct((B, nC, nh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xdt, log_a, b, c)

@@ -1,0 +1,47 @@
+"""Jitted SSD wrapper: Pallas intra-chunk kernel + jnp inter-chunk scan."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_intra_chunk
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "head_block",
+                                             "interpret"))
+def ssd_scan(xdt, log_a, b, c, chunk: int = 128, head_block: int = 8,
+             interpret: bool = False):
+    """Full SSD: y [B,S,nh,hd] (f32).  Pads S to a chunk multiple (pads are
+    identity steps: xdt=0, log_a=0)."""
+    B, S, nh, hd = xdt.shape
+    st = b.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        zf = lambda t: jnp.pad(t, [(0, 0), (0, pad)] +
+                               [(0, 0)] * (t.ndim - 2))
+        xdt, log_a, b, c = zf(xdt), zf(log_a), zf(b), zf(c)
+    Sp = S + pad
+    nC = Sp // Q
+
+    y_intra, h_chunk, a_chunk = ssd_intra_chunk(
+        xdt, log_a, b, c, chunk=Q, head_block=head_block,
+        interpret=interpret)
+
+    # inter-chunk recurrence (cheap): h after chunk i
+    def step(h, inp):
+        hc, ac = inp
+        return h * ac[..., None, None] + hc, h
+    h0 = jnp.zeros((B, nh, hd, st), jnp.float32)
+    _, h_prevs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(h_chunk, 1, 0), jnp.moveaxis(a_chunk, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)            # [B,nC,nh,hd,st]
+
+    acum = jnp.cumsum(log_a.reshape(B, nC, Q, nh), axis=2)
+    y_inter = jnp.einsum("bnqs,bnhds,bnqh->bnqhd",
+                         c.reshape(B, nC, Q, st).astype(jnp.float32),
+                         h_prevs, jnp.exp(acum))
+    y = y_intra.reshape(B, nC, Q, nh, hd) + y_inter
+    return y.reshape(B, Sp, nh, hd)[:, :S]

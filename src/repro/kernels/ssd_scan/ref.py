@@ -1,0 +1,27 @@
+"""Independent oracle: naive per-timestep SSD recurrence (O(S) scan)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_ssd(xdt, log_a, b, c):
+    """xdt: [B,S,nh,hd]; log_a: [B,S,nh]; b,c: [B,S,st] →
+    y [B,S,nh,hd] f32 via h_t = e^{log_a_t}·h_{t-1} + xdt_t ⊗ b_t,
+    y_t = h_t · c_t."""
+    B, S, nh, hd = xdt.shape
+    st = b.shape[-1]
+
+    def step(h, inp):
+        x_t, a_t, b_t, c_t = inp
+        h = h * jnp.exp(a_t)[..., None, None] + \
+            jnp.einsum("bhd,bs->bhds", x_t.astype(jnp.float32),
+                       b_t.astype(jnp.float32))
+        y = jnp.einsum("bhds,bs->bhd", h, c_t.astype(jnp.float32))
+        return h, y
+
+    h0 = jnp.zeros((B, nh, hd, st), jnp.float32)
+    xs = (jnp.moveaxis(xdt, 1, 0), jnp.moveaxis(log_a, 1, 0),
+          jnp.moveaxis(b, 1, 0), jnp.moveaxis(c, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1)

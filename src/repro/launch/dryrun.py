@@ -1,0 +1,355 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell on the production mesh and record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Artifacts: experiments/dryrun/<arch>__<shape>__<mesh>.json (schema in
+`repro.core.calibration`).  The 512 placeholder host devices exist ONLY in
+this process; smoke tests and benchmarks see 1 device.
+"""
+
+import argparse
+import gzip
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ARCH_IDS, get_config
+from ..models.api import build_model
+from ..optim import adamw
+from ..sharding import axes as ax
+from ..train.step import make_train_step
+from . import shapes as sh
+from .hlo_analysis import analyze, extract_cost, extract_memory
+from .mesh import make_production_mesh
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+# TPU v5e hardware constants (roofline targets).
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+
+# §Perf winning variants (hypothesis→measure log in EXPERIMENTS.md).
+# --variant optimized applies these; baseline ignores them.
+PERF_VARIANTS = {
+    # small dense/SSM models at global batch 256: pure 256/512-way DP;
+    # fsdp=True adds ZeRO-3 param sharding over `data` where replicated
+    # params + f32 grads would exceed the 16 GB/chip budget
+    ("qwen3-1.7b", "train_4k"): ("pure_dp", {"fsdp": True}),
+    ("mamba2-2.7b", "train_4k"): ("pure_dp", {"ssm_chunk": 64,
+                                              "fsdp": True}),
+    ("qwen2-vl-2b", "train_4k"): ("pure_dp", {"fsdp": True}),
+    # MoE dispatch groups interact badly with pod-axis context parallelism
+    # (measured 31 s collective; EXPERIMENTS §Perf) — single-pod only.
+    ("granite-moe-1b-a400m", "train_4k"): ("pure_dp_singlepod", {}),
+    ("whisper-small", "train_4k"): ("pure_dp", {}),
+    ("phi4-mini-3.8b", "train_4k"): ("pure_dp", {"fsdp": True}),
+}
+
+
+def rules_for(shape_name: str, multi_pod: bool, overrides=None) -> ax.Rules:
+    if shape_name == "long_500k":
+        r = ax.sequence_parallel_rules(multi_pod)
+    elif shape_name == "decode_32k":
+        # flash-decode: KV cache sequence-sharded over `model` (the KV-head
+        # counts of the assigned archs don't divide 16; the sequence always
+        # does), partial softmax combined by an all-reduce.
+        r = ax.base_rules(multi_pod)
+        r["seq_kv"] = "model"
+        r["kv_heads"] = None
+    else:
+        r = ax.base_rules(multi_pod)
+    if overrides:
+        r.update(overrides)
+    return r
+
+
+def lower_cell(arch_id: str, shape_name: str, multi_pod: bool,
+               rule_overrides=None, cfg_overrides=None,
+               variant: str = "baseline"):
+    """Build + lower + compile one cell.  Returns (record, compiled)."""
+    import dataclasses
+    cfg = get_config(arch_id)
+    if variant == "optimized" and (arch_id, shape_name) in PERF_VARIANTS:
+        kind, cfg_ovr = PERF_VARIANTS[(arch_id, shape_name)]
+        if kind == "pure_dp_singlepod" and multi_pod:
+            raise ValueError(
+                f"{arch_id} {shape_name}: optimized variant is single-pod "
+                "only (use baseline for 2x16x16)")
+        cfg_overrides = {**cfg_ovr, **(cfg_overrides or {})}
+        if kind.startswith("pure_dp"):
+            rule_overrides = {**ax.pure_dp_rules(multi_pod),
+                              **(rule_overrides or {})}
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    model = build_model(cfg)
+    sp = sh.SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for(shape_name, multi_pod, rule_overrides)
+    n_dev = mesh.devices.size
+    variant_tag = variant
+
+    with ax.use_rules(rules, mesh):
+        p_axes = model.param_axes()
+        params_abs = model.abstract_params()
+        param_rules = ax.fsdp_rules(rules, multi_pod) if cfg.fsdp else rules
+        p_shard = ax.tree_shardings_matched(p_axes, params_abs, mesh,
+                                            param_rules)
+        batch_rules = rules
+
+        def batch_shardings(specs):
+            return {
+                k: jax.sharding.NamedSharding(mesh, ax.divisible_spec(
+                    ax.spec_for(("batch", "seq") if v.ndim == 2 else
+                                ("batch", "seq", None), batch_rules),
+                    v.shape, mesh))
+                for k, v in specs.items()}
+
+        if sp.step == "train":
+            opt_rules = ax.opt_rules(param_rules, multi_pod)
+            opt_abs = jax.eval_shape(adamw.init, params_abs)
+            mu_shard = ax.tree_shardings_matched(p_axes, opt_abs.mu, mesh,
+                                                 opt_rules)
+            opt_shard = adamw.AdamWState(
+                jax.sharding.NamedSharding(mesh, ax.spec_for(())),
+                mu_shard, jax.tree.map(lambda s: s, mu_shard))
+            batch_abs = sh.train_batch_specs(cfg, sp)
+            b_shard = batch_shardings(batch_abs)
+            step_fn = make_train_step(model, adamw.AdamWConfig())
+            jitted = jax.jit(step_fn,
+                             in_shardings=(p_shard, opt_shard, b_shard),
+                             out_shardings=(p_shard, opt_shard, None),
+                             donate_argnums=(0, 1))
+            with mesh:
+                lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+
+        elif sp.step == "prefill":
+            batch_abs = sh.prefill_batch_specs(cfg, sp)
+            b_shard = batch_shardings(batch_abs)
+            caches_abs = jax.eval_shape(
+                lambda: model.init_caches(sp.batch, sp.seq))
+            cache_shard = ax.tree_shardings_matched(
+                model.cache_axes(), caches_abs, mesh, rules)
+
+            def prefill_step(params, batch):
+                return model.prefill(params, batch, sp.seq)
+
+            jitted = jax.jit(prefill_step,
+                             in_shardings=(p_shard, b_shard),
+                             out_shardings=(None, cache_shard))
+            with mesh:
+                lowered = jitted.lower(params_abs, batch_abs)
+
+        else:  # decode
+            token_abs, pos_abs = sh.decode_token_specs(cfg, sp)
+            caches_abs = jax.eval_shape(
+                lambda: model.init_caches(sp.batch, sp.seq))
+            cache_shard = ax.tree_shardings_matched(
+                model.cache_axes(), caches_abs, mesh, rules)
+            tok_shard = jax.sharding.NamedSharding(mesh, ax.divisible_spec(
+                ax.spec_for(("batch", None), rules), (sp.batch, 1), mesh))
+            pos_shard = jax.sharding.NamedSharding(mesh, ax.spec_for((), rules))
+
+            def decode(params, token, pos, caches):
+                return model.decode_step(params, token, pos, caches)
+
+            jitted = jax.jit(decode,
+                             in_shardings=(p_shard, tok_shard, pos_shard,
+                                           cache_shard),
+                             out_shardings=(None, cache_shard),
+                             donate_argnums=(3,))
+            with mesh:
+                lowered = jitted.lower(params_abs, token_abs,
+                                       jnp.zeros((), jnp.int32), caches_abs)
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+    rec = {
+        "arch": arch_id, "shape": shape_name, "variant": variant_tag,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev, "step": sp.step,
+        "batch": sp.batch, "seq": sp.seq,
+        "compile_seconds": compile_s,
+        "n_params": model.n_params(),
+    }
+    rec.update(extract_memory(compiled))
+    rec.update(extract_cost(compiled))
+    hc = analyze(compiled.as_text(), n_dev)
+    rec.update({f"bytes_{k}": v for k, v in hc.collective_bytes.items()})
+    rec.update({f"count_{k}": v for k, v in hc.collective_counts.items()})
+    rec["n_while"] = hc.n_while
+
+    # roofline terms (per-device, per-step) — loop-aware HLO accounting
+    flops = hc.flops
+    bytes_ = hc.hbm_bytes
+    rec["flops_per_device"] = flops
+    rec["bytes_per_device"] = bytes_
+    rec["collective_bytes_per_device"] = hc.collective_total
+    rec["t_compute"] = flops / PEAK_FLOPS
+    rec["t_memory"] = bytes_ / HBM_BW
+    rec["t_collective"] = hc.collective_total / ICI_BW
+    terms = {"compute": rec["t_compute"], "memory": rec["t_memory"],
+             "collective": rec["t_collective"]}
+    rec["bottleneck"] = max(terms, key=terms.get)
+
+    # MODEL_FLOPS: 6·N·D (dense) / 6·N_active·D per step (train: ×3 fwd+bwd
+    # is already the 6 factor; serve: 2·N·D)
+    n_active = cfg.active_params_estimate()
+    tokens = sp.batch * (sp.seq if sp.step != "decode" else 1)
+    model_flops = (6 if sp.step == "train" else 2) * n_active * tokens
+    rec["model_flops_global"] = float(model_flops)
+    hlo_global = flops * n_dev
+    rec["useful_flops_fraction"] = (
+        float(model_flops) / hlo_global if hlo_global else 0.0)
+    return rec, compiled
+
+
+def run_cell(arch_id, shape_name, multi_pod, out_dir=OUT_DIR, verbose=True,
+             variant="baseline"):
+    os.makedirs(out_dir, exist_ok=True)
+    hlo_dir = os.path.join(out_dir, "..", "hlo")
+    os.makedirs(hlo_dir, exist_ok=True)
+    tag = f"{arch_id}__{shape_name}__{'2x16x16' if multi_pod else '16x16'}"
+    if variant != "baseline":
+        tag += "__opt"
+    path = os.path.join(out_dir, tag + ".json")
+    try:
+        rec, compiled = lower_cell(arch_id, shape_name, multi_pod,
+                                   variant=variant)
+        with gzip.open(os.path.join(hlo_dir, tag + ".hlo.gz"), "wt") as f:
+            f.write(compiled.as_text())
+        if verbose:
+            print(f"[OK] {tag}: compile={rec['compile_seconds']:.1f}s "
+                  f"flops/dev={rec['flops_per_device']:.3e} "
+                  f"coll/dev={rec['collective_bytes_per_device']:.3e} "
+                  f"bottleneck={rec['bottleneck']}", flush=True)
+        mem = rec.get("temp_size_in_bytes")
+        if verbose and mem is not None:
+            print(f"     mem: args={rec.get('argument_size_in_bytes', 0)/1e9:.2f}GB "
+                  f"temp={mem/1e9:.2f}GB", flush=True)
+    except Exception as e:
+        rec = {"arch": arch_id, "shape": shape_name, "variant": variant,
+               "mesh": "2x16x16" if multi_pod else "16x16",
+               "error": repr(e), "traceback": traceback.format_exc()}
+        print(f"[FAIL] {tag}: {e!r}", flush=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def reanalyze_all(out_dir=OUT_DIR):
+    """Recompute analyzer-derived metrics from the stored compiled HLO —
+    analysis iterations without recompiling."""
+    hlo_dir = os.path.join(out_dir, "..", "hlo")
+    for fn in sorted(os.listdir(out_dir)):
+        if not fn.endswith(".json"):
+            continue
+        path = os.path.join(out_dir, fn)
+        with open(path) as f:
+            rec = json.load(f)
+        if "error" in rec:
+            continue
+        hlo_path = os.path.join(hlo_dir, fn[:-5] + ".hlo.gz")
+        if not os.path.exists(hlo_path):
+            continue
+        with gzip.open(hlo_path, "rt") as f:
+            txt = f.read()
+        hc = analyze(txt, rec["n_devices"])
+        rec.update({f"bytes_{k}": v for k, v in hc.collective_bytes.items()})
+        rec.update({f"count_{k}": v for k, v in hc.collective_counts.items()})
+        rec["n_while"] = hc.n_while
+        rec["flops_per_device"] = hc.flops
+        rec["bytes_per_device"] = hc.hbm_bytes
+        rec["collective_bytes_per_device"] = hc.collective_total
+        rec["t_compute"] = hc.flops / PEAK_FLOPS
+        rec["t_memory"] = hc.hbm_bytes / HBM_BW
+        rec["t_collective"] = hc.collective_total / ICI_BW
+        terms = {"compute": rec["t_compute"], "memory": rec["t_memory"],
+                 "collective": rec["t_collective"]}
+        rec["bottleneck"] = max(terms, key=terms.get)
+        hlo_global = hc.flops * rec["n_devices"]
+        rec["useful_flops_fraction"] = (
+            rec["model_flops_global"] / hlo_global if hlo_global else 0.0)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[reanalyzed] {fn[:-5]}: bottleneck={rec['bottleneck']}",
+              flush=True)
+
+
+def all_cells():
+    for arch_id in ARCH_IDS:
+        cfg = get_config(arch_id)
+        for shape_name in sh.applicable_cells(cfg):
+            yield arch_id, shape_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline", "optimized"])
+    ap.add_argument("--reanalyze", action="store_true",
+                    help="recompute roofline metrics from stored HLO "
+                         "without recompiling")
+    args = ap.parse_args()
+
+    if args.reanalyze:
+        reanalyze_all(args.out)
+        return
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    if args.all:
+        cells = list(all_cells())
+        if args.variant == "optimized":
+            cells = [c for c in cells if c in PERF_VARIANTS]
+    else:
+        cfg = get_config(args.arch)
+        shapes = [args.shape] if args.shape else sh.applicable_cells(cfg)
+        cells = [(args.arch, s) for s in shapes]
+
+    failures = 0
+    for arch_id, shape_name in cells:
+        for mp in meshes:
+            if (args.variant == "optimized" and mp
+                    and PERF_VARIANTS.get((arch_id, shape_name),
+                                          ("", {}))[0].endswith("singlepod")):
+                print(f"[skip] {arch_id} {shape_name} 2x16x16: optimized "
+                      "variant is single-pod only", flush=True)
+                continue
+            tag = f"{arch_id}__{shape_name}__{'2x16x16' if mp else '16x16'}"
+            if args.variant != "baseline":
+                tag += "__opt"
+            path = os.path.join(args.out, tag + ".json")
+            if args.skip_existing and os.path.exists(path):
+                with open(path) as f:
+                    if "error" not in json.load(f):
+                        print(f"[skip] {tag}", flush=True)
+                        continue
+            rec = run_cell(arch_id, shape_name, mp, args.out,
+                           variant=args.variant)
+            failures += 1 if "error" in rec else 0
+    print(f"done; failures={failures}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

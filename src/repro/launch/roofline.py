@@ -1,0 +1,117 @@
+"""Roofline report: per (arch × shape × mesh) three-term analysis from the
+dry-run artifacts.
+
+    compute   = HLO_FLOPs / (chips · 197 TFLOP/s)        [per-device HLO]
+    memory    = HLO_bytes / (chips · 819 GB/s)
+    collective= collective_bytes / (chips · 50 GB/s/link)
+
+(HLO quantities are per-device — SPMD shapes are already partitioned — so
+the chips factor is implicit.)  Also reports MODEL_FLOPS = 6·N_active·D
+(train) / 2·N_active·D (serve), the useful-FLOPs fraction, the dominant
+term, and the roofline fraction = t_compute / max(terms).
+
+    PYTHONPATH=src python -m repro.launch.roofline [--mesh 16x16] [--csv]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "experiments", "dryrun")
+
+
+def load_records(dryrun_dir: str = DRYRUN_DIR) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if "error" not in r:
+            recs.append(r)
+    return recs
+
+
+def fmt_row(r: Dict) -> Dict:
+    tc, tm, tl = r["t_compute"], r["t_memory"], r["t_collective"]
+    dom = max(tc, tm, tl)
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "t_compute_s": tc, "t_memory_s": tm, "t_collective_s": tl,
+        "bottleneck": r["bottleneck"],
+        "roofline_fraction": tc / dom if dom else 0.0,
+        "useful_flops_frac": r.get("useful_flops_fraction", 0.0),
+        "model_flops": r.get("model_flops_global", 0.0),
+        "hbm_gb_per_dev": (r.get("argument_size_in_bytes", 0)
+                           + r.get("temp_size_in_bytes", 0)) / 1e9,
+        "fits_v5e_16g": (r.get("argument_size_in_bytes", 0)
+                         + r.get("temp_size_in_bytes", 0)) < 16e9,
+        "compile_s": r.get("compile_seconds", 0.0),
+    }
+
+
+def one_liner(r: Dict) -> str:
+    """What would move the dominant term down (heuristic advisor)."""
+    f = fmt_row(r)
+    b = f["bottleneck"]
+    if b == "collective":
+        if r["shape"] == "train_4k":
+            return ("shrink TP width / move act gathers to bf16 / "
+                    "reduce-scatter instead of all-reduce")
+        return "keep EP traffic pod-local; batch KV collectives"
+    if b == "memory":
+        if r["step"] == "decode":
+            return "decode is weight/KV-bandwidth bound (expected); raise batch"
+        return "blockwise attention + fewer f32 materializations"
+    return "compute-bound: raise per-chip utilization (good place to be)"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None, choices=[None, "16x16", "2x16x16"])
+    ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--dir", default=DRYRUN_DIR)
+    args = ap.parse_args(argv)
+
+    recs = load_records(args.dir)
+    if args.mesh:
+        recs = [r for r in recs if r["mesh"] == args.mesh]
+    recs.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+    if args.csv:
+        cols = ["arch", "shape", "mesh", "t_compute_s", "t_memory_s",
+                "t_collective_s", "bottleneck", "roofline_fraction",
+                "useful_flops_frac", "hbm_gb_per_dev", "fits_v5e_16g"]
+        print(",".join(cols))
+        for r in recs:
+            f = fmt_row(r)
+            print(",".join(
+                f"{f[c]:.4g}" if isinstance(f[c], float) else str(f[c])
+                for c in cols))
+        return
+
+    hdr = (f"{'arch':26s} {'shape':12s} {'mesh':8s} {'t_comp':>9s} "
+           f"{'t_mem':>9s} {'t_coll':>9s} {'bound':>10s} {'roofl%':>7s} "
+           f"{'useful%':>8s} {'GB/dev':>7s} fit")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in recs:
+        f = fmt_row(r)
+        print(f"{f['arch']:26s} {f['shape']:12s} {f['mesh']:8s} "
+              f"{f['t_compute_s']:9.3g} {f['t_memory_s']:9.3g} "
+              f"{f['t_collective_s']:9.3g} {f['bottleneck']:>10s} "
+              f"{100*f['roofline_fraction']:6.1f}% "
+              f"{100*f['useful_flops_frac']:7.1f}% "
+              f"{f['hbm_gb_per_dev']:7.2f} "
+              f"{'Y' if f['fits_v5e_16g'] else 'N'}")
+    print()
+    for r in recs:
+        f = fmt_row(r)
+        if f["roofline_fraction"] < 0.25 or not f["fits_v5e_16g"]:
+            print(f"* {f['arch']} {f['shape']} {f['mesh']}: {one_liner(r)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Serving launcher: batched continuous-batching engine over a model.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-moe-1b-a400m \
+        --requests 12 --slots 4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from ..configs.base import get_config, get_smoke_config
+from ..models.api import build_model
+from ..serve.engine import Request, ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-moe-1b-a400m")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--max-seq", type=int, default=96)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, batch_slots=args.slots,
+                         max_seq=args.max_seq, prompt_len=args.prompt_len)
+
+    rng = np.random.default_rng(0)
+    for rid in range(args.requests):
+        engine.submit(Request(
+            rid, rng.integers(0, cfg.vocab, size=args.prompt_len),
+            max_new_tokens=args.max_new))
+    t0 = time.time()
+    steps = engine.run_until_drained()
+    dt = time.time() - t0
+    print(f"arch={cfg.name} requests={args.requests} slots={args.slots} "
+          f"engine_steps={steps} prefills={engine.stats['prefills']} "
+          f"decode_steps={engine.stats['decode_steps']} "
+          f"tokens={engine.stats['tokens']} tok/s={engine.stats['tokens']/dt:,.0f}")
+    return engine.stats
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Assigned input-shape sets and ShapeDtypeStruct stand-ins.
+
+Four shapes per LM architecture (see DESIGN.md §5 for skips):
+    train_4k      seq 4096  × global_batch 256   (train_step)
+    prefill_32k   seq 32768 × global_batch 32    (serve prefill)
+    decode_32k    one token, KV cache 32768, batch 128   (serve decode)
+    long_500k     one token, cache 524288, batch 1 — SSM/hybrid only
+
+`input_specs(cfg, shape)` returns weak-type-correct, shardable
+ShapeDtypeStructs — no device allocation ever happens in the dry-run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq: int
+    batch: int
+    step: str      # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg: ArchConfig, shape: str) -> bool:
+    if shape == "long_500k":
+        return cfg.sub_quadratic   # full-attention archs skip (DESIGN.md §5)
+    return True
+
+
+def applicable_cells(cfg: ArchConfig):
+    return [s for s in SHAPES if cell_applicable(cfg, s)]
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, SDS]:
+    B, S = shape.batch, shape.seq
+    if cfg.family == "audio":
+        return {"frames": SDS((B, S, cfg.d_model), jnp.bfloat16),
+                "tokens": SDS((B, cfg.dec_max_seq), jnp.int32)}
+    if cfg.family == "vlm":
+        sv = cfg.frontend_seq
+        return {"tokens": SDS((B, S - sv), jnp.int32),
+                "vision_embeds": SDS((B, sv, cfg.d_model), jnp.bfloat16)}
+    return {"tokens": SDS((B, S), jnp.int32)}
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, SDS]:
+    B, S = shape.batch, shape.seq
+    if cfg.family == "audio":
+        return {"frames": SDS((B, S, cfg.d_model), jnp.bfloat16),
+                "tokens": SDS((B, cfg.dec_max_seq), jnp.int32)}
+    if cfg.family == "vlm":
+        sv = cfg.frontend_seq
+        return {"tokens": SDS((B, S - sv), jnp.int32),
+                "vision_embeds": SDS((B, sv, cfg.d_model), jnp.bfloat16)}
+    return {"tokens": SDS((B, S), jnp.int32)}
+
+
+def decode_token_specs(cfg: ArchConfig, shape: ShapeSpec):
+    B = shape.batch
+    token = SDS((B, 1), jnp.int32)
+    pos = SDS((), jnp.int32)
+    return token, pos
+
+
+def abstract_caches(model, cfg: ArchConfig, shape: ShapeSpec):
+    """ShapeDtypeStructs for the serve caches (decode shapes)."""
+    shapes = jax.eval_shape(
+        lambda: model.init_caches(shape.batch, shape.seq))
+    return shapes
+
+
+def make_concrete_batch(cfg: ArchConfig, shape_name: str, key,
+                        batch_override: Optional[int] = None,
+                        seq_override: Optional[int] = None):
+    """Small concrete batch for smoke tests / examples (not the dry-run)."""
+    sp = SHAPES[shape_name]
+    B = batch_override or sp.batch
+    S = seq_override or sp.seq
+    if cfg.family == "audio":
+        return {"frames": jax.random.normal(key, (B, S, cfg.d_model),
+                                            jnp.bfloat16),
+                "tokens": jax.random.randint(
+                    key, (B, min(cfg.dec_max_seq, 64)), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        sv = min(cfg.frontend_seq, S // 2)
+        return {"tokens": jax.random.randint(key, (B, S - sv), 0, cfg.vocab),
+                "vision_embeds": jax.random.normal(
+                    key, (B, sv, cfg.d_model), jnp.bfloat16)}
+    return {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab)}

@@ -1,0 +1,57 @@
+"""Append the final roofline results snapshot to EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m repro.launch.snapshot
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from .roofline import DRYRUN_DIR, fmt_row, load_records
+
+EXP = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "EXPERIMENTS.md")
+MARK = "## §Results snapshot"
+
+
+def table(recs, title):
+    lines = [f"### {title}", "",
+             "| arch | shape | mesh | t_comp (s) | t_mem (s) | t_coll (s) |"
+             " bound | roofline | useful | GB/dev | fits 16G |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        f = fmt_row(r)
+        lines.append(
+            f"| {f['arch']} | {f['shape']} | {f['mesh']} "
+            f"| {f['t_compute_s']:.3g} | {f['t_memory_s']:.3g} "
+            f"| {f['t_collective_s']:.3g} | {f['bottleneck']} "
+            f"| {100*f['roofline_fraction']:.1f}% "
+            f"| {100*f['useful_flops_frac']:.0f}% "
+            f"| {f['hbm_gb_per_dev']:.1f} "
+            f"| {'Y' if f['fits_v5e_16g'] else 'N'} |")
+    return "\n".join(lines) + "\n"
+
+
+def main():
+    recs = load_records()
+    base = [r for r in recs if r.get("variant", "baseline") == "baseline"]
+    opt = [r for r in recs if r.get("variant") == "optimized"]
+    base.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    opt.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+    out = [MARK, "",
+           f"{len(base)} baseline cells + {len(opt)} optimized variants; "
+           "terms per §Roofline (per-device, per-step).", "",
+           table(base, "Baseline (paper-faithful defaults)"), "",
+           table(opt, "Optimized variants (--variant optimized; §Perf)")]
+
+    with open(EXP) as f:
+        text = f.read()
+    head = text.split(MARK)[0]
+    with open(EXP, "w") as f:
+        f.write(head + "\n".join(out) + "\n")
+    print(f"snapshot appended: {len(base)} baseline, {len(opt)} optimized")
+
+
+if __name__ == "__main__":
+    main()

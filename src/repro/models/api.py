@@ -1,0 +1,76 @@
+"""Unified model facade.
+
+`Model(cfg)` exposes, for every family:
+    spec / init / abstract_params / param_axes
+    loss(params, batch)                           — training objective
+    prefill(params, batch)  → (logits, caches)    — serving prompt phase
+    decode_step(params, token, pos, caches)       — serving decode phase
+    init_caches / cache_axes
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import encdec, lm
+from .params import abstract_params, axes_tree, init_params, n_params
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.is_encdec = cfg.family == "audio"
+        self.spec = (encdec.encdec_spec(cfg) if self.is_encdec
+                     else lm.lm_spec(cfg))
+
+    # --- parameters ---
+    def init(self, key, dtype=jnp.bfloat16):
+        return init_params(self.spec, key, dtype)
+
+    def abstract_params(self, dtype=jnp.bfloat16):
+        return abstract_params(self.spec, dtype)
+
+    def param_axes(self):
+        return axes_tree(self.spec)
+
+    def n_params(self) -> int:
+        return n_params(self.spec)
+
+    # --- training ---
+    def loss(self, params, batch):
+        if self.is_encdec:
+            return encdec.encdec_loss(self.cfg, params, batch)
+        return lm.lm_loss(self.cfg, params, batch)
+
+    # --- serving ---
+    def prefill(self, params, batch, max_seq: int):
+        cfg = self.cfg
+        if self.is_encdec:
+            return encdec.serve_prefill(cfg, params, batch["frames"],
+                                        batch["tokens"])
+        logits, caches, _ = lm.prefill(cfg, params, batch["tokens"], max_seq,
+                                       batch.get("vision_embeds"))
+        return logits, caches
+
+    def decode_step(self, params, token, pos, caches):
+        if self.is_encdec:
+            return encdec.serve_decode_step(self.cfg, params, token, pos,
+                                            caches)
+        return lm.decode_step(self.cfg, params, token, pos, caches)
+
+    def init_caches(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        if self.is_encdec:
+            return encdec.init_dec_caches(self.cfg, batch, max_seq, dtype)
+        return lm.init_caches(self.cfg, batch, max_seq, dtype)
+
+    def cache_axes(self):
+        if self.is_encdec:
+            return encdec.dec_cache_axes(self.cfg)
+        return lm.cache_axes(self.cfg)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

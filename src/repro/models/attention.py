@@ -1,0 +1,225 @@
+"""Grouped-query attention: training/prefill (full causal), decode with a
+KV cache, and optional cross-attention (enc-dec).
+
+The default math path is pure jnp (the oracle the Pallas flash-attention
+kernel is validated against); `cfg.use_flash_kernel` switches prefill to
+`repro.kernels.flash_attention` on TPU.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.axes import shard
+from .layers import apply_mrope, apply_rope, rms_norm
+from .params import ParamDef, Spec
+
+NEG_INF = -2.0e38
+
+
+def attn_spec(cfg: ArchConfig, cross: bool = False) -> Spec:
+    d, H, Hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    spec = {
+        "q": ParamDef((d, H, hd), ("embed", "heads", "head_dim")),
+        "k": ParamDef((d, Hk, hd), ("embed", "kv_heads", "head_dim")),
+        "v": ParamDef((d, Hk, hd), ("embed", "kv_heads", "head_dim")),
+        "o": ParamDef((H, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm and not cross:
+        spec["q_norm"] = ParamDef((hd,), ("head_dim",), init="ones")
+        spec["k_norm"] = ParamDef((hd,), ("head_dim",), init="ones")
+    return spec
+
+
+def _project_qkv(cfg: ArchConfig, p, x, x_kv=None, positions=None,
+                 positions3=None, use_rope=True):
+    x_kv = x if x_kv is None else x_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["q"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x_kv, p["k"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x_kv, p["v"].astype(x.dtype))
+    if cfg.qk_norm and "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope and positions is not None:
+        if cfg.mrope_sections is not None and positions3 is not None:
+            q = apply_mrope(q, positions3, cfg.mrope_sections, cfg.rope_theta)
+            k = apply_mrope(k, positions3, cfg.mrope_sections, cfg.rope_theta)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    k = shard(k, "batch", "seq_kv", "kv_heads", "head_dim")
+    v = shard(v, "batch", "seq_kv", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def _sdpa(cfg: ArchConfig, q, k, v, mask):
+    """q: [B,Sq,H,hd]; k,v: [B,Skv,Hk,hd]; mask broadcastable to
+    [B,1,Sq,Skv] (True = attend)."""
+    B, Sq, H, hd = q.shape
+    Hk = k.shape[2]
+    G = H // Hk
+    qg = q.reshape(B, Sq, Hk, G, hd)
+    logits = jnp.einsum("bqhgk,bshk->bhgqs", qg, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(hd).astype(jnp.float32)
+    if cfg.attn_logits_soft_cap:
+        c = cfg.attn_logits_soft_cap
+        logits = c * jnp.tanh(logits / c)
+    logits = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask,
+                       logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqs,bshk->bqhgk", w, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+# Use blockwise (online-softmax) attention above this many score elements.
+_BLOCKWISE_THRESHOLD = 4096 * 4096
+
+
+def _sdpa_blockwise(cfg: ArchConfig, q, k, v, causal: bool,
+                    q_chunk: int = 512, kv_chunk: int = 1024):
+    """Flash-style double-blocked attention (jnp): scans query blocks, and
+    for each, key/value blocks with an online-softmax carry.  Never
+    materializes [Sq,Skv] scores — this is the memory-sane path for 32k+
+    sequences and the oracle shape of the Pallas kernel."""
+    B, Sq0, H, hd = q.shape
+    Skv0 = k.shape[1]
+    Hk = k.shape[2]
+    G = H // Hk
+    qc = max(1, min(q_chunk, Sq0))
+    kc = max(1, min(kv_chunk, Skv0))
+    # pad instead of shrinking blocks (non-divisible S must not degenerate
+    # the chunk size); padded KV columns are masked via kv_len below.
+    qpad, kpad = (-Sq0) % qc, (-Skv0) % kc
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    Sq, Skv = Sq0 + qpad, Skv0 + kpad
+    nq, nk = Sq // qc, Skv // kc
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    qb = jnp.moveaxis(q.reshape(B, nq, qc, Hk, G, hd), 1, 0)
+    kb = jnp.moveaxis(k.reshape(B, nk, kc, Hk, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, kc, Hk, hd), 1, 0)
+
+    def q_block(_, qx):
+        qi, qblk = qx                                     # [], [B,qc,Hk,G,hd]
+        q_pos = qi * qc + jnp.arange(qc)
+
+        def kv_block(carry, kx):
+            m, l, acc = carry
+            ki, kblk, vblk = kx
+            s = jnp.einsum("bqhgk,bshk->bhgqs", qblk, kblk)
+            s = s.astype(jnp.float32) * scale             # [B,Hk,G,qc,kc]
+            if cfg.attn_logits_soft_cap:
+                c = cfg.attn_logits_soft_cap
+                s = c * jnp.tanh(s / c)
+            k_pos = ki * kc + jnp.arange(kc)
+            mask = k_pos[None, :] < Skv0                  # padded KV cols
+            if causal:
+                mask = mask & (q_pos[:, None] >= k_pos[None, :])
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))             # [B,Hk,G,qc]
+            corr = jnp.exp(m - m_new)
+            p_ = jnp.exp(s - m_new[..., None])
+            l_new = l * corr + p_.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqs,bshk->bhgqk", p_, vblk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hk, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hk, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, Hk, G, qc, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0), (jnp.arange(nk), kb, vb))
+        out = acc / jnp.maximum(l[..., None], 1e-30)      # [B,Hk,G,qc,hd]
+        out = jnp.moveaxis(out, 3, 1).reshape(B, qc, H, hd)
+        return None, out.astype(q.dtype)
+
+    _, blocks = jax.lax.scan(q_block, None, (jnp.arange(nq), qb))
+    return jnp.moveaxis(blocks, 0, 1).reshape(B, Sq, H, hd)[:, :Sq0]
+
+
+def _dispatch_sdpa(cfg: ArchConfig, q, k, v, causal: bool, mask=None):
+    """Pick the O(S²)-mask path (small) or blockwise path (large)."""
+    Sq, Skv = q.shape[1], k.shape[1]
+    if Sq * Skv >= _BLOCKWISE_THRESHOLD and mask is None:
+        return _sdpa_blockwise(cfg, q, k, v, causal)
+    if mask is None:
+        if causal:
+            qp, kp = jnp.arange(Sq), jnp.arange(Skv)
+            mask = (qp[:, None] >= kp[None, :])[None, None]
+        else:
+            mask = jnp.ones((1, 1, Sq, Skv), bool)
+    return _sdpa(cfg, q, k, v, mask)
+
+
+def attention(cfg: ArchConfig, p, x, positions, positions3=None,
+              causal=True, x_kv=None, kv_positions=None, use_rope=True):
+    """Full attention for training / prefill / encoder / cross-attn."""
+    q, k, v = _project_qkv(cfg, p, x, x_kv, positions, positions3, use_rope)
+    if cfg.use_flash_kernel and causal and x_kv is None:
+        from ..kernels.flash_attention import ops as fa
+        out = fa.flash_attention(q, k, v, causal=True)
+    else:
+        out = _dispatch_sdpa(cfg, q, k, v, causal)
+    out = shard(out, "batch", "seq", "heads", "head_dim")
+    y = jnp.einsum("bshk,hkd->bsd", out, p["o"].astype(out.dtype))
+    return shard(y, "batch", "seq", "act_embed")
+
+
+class KVCache(NamedTuple):
+    k: jax.Array       # [B, Smax, Hk, hd]
+    v: jax.Array
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    shape = (batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def prefill_attention(cfg: ArchConfig, p, x, positions, cache: KVCache,
+                      positions3=None):
+    """Causal attention that also writes the prompt K/V into the cache."""
+    q, k, v = _project_qkv(cfg, p, x, None, positions, positions3)
+    S = x.shape[1]
+    cache = KVCache(jax.lax.dynamic_update_slice(
+                        cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0)),
+                    jax.lax.dynamic_update_slice(
+                        cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0)))
+    out = _dispatch_sdpa(cfg, q, k, v, causal=True)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["o"].astype(out.dtype))
+    return shard(y, "batch", "seq", "act_embed"), cache
+
+
+def decode_attention(cfg: ArchConfig, p, x, pos, cache: KVCache,
+                     positions3=None):
+    """One-token decode: x [B,1,d]; pos [] scalar current index (same for
+    all batch rows).  Returns (y [B,1,d], cache')."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(cfg, p, x, None, positions, positions3)
+    cache = KVCache(
+        jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                     (0, pos, 0, 0)),
+        jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                     (0, pos, 0, 0)))
+    Smax = cache.k.shape[1]
+    mask = (jnp.arange(Smax)[None, None, :] <= pos)[:, None]   # [1,1,1,Smax]
+    out = _sdpa(cfg, q, cache.k, cache.v, mask)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["o"].astype(out.dtype))
+    return shard(y, "batch", "seq", "act_embed"), cache
+
+
+def cross_attention_cached(cfg: ArchConfig, p, x, enc_k, enc_v):
+    """Decoder cross-attention against precomputed encoder K/V."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["q"].astype(x.dtype))
+    out = _dispatch_sdpa(cfg, q, enc_k, enc_v, causal=False)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["o"].astype(out.dtype))
+    return y

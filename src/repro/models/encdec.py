@@ -1,0 +1,214 @@
+"""Encoder-decoder transformer (Whisper-style audio backbone).
+
+The conv frontend is a STUB per the assignment: `input_specs()` provides
+precomputed frame embeddings [B, S_enc, d_model] (post-conv features);
+sinusoidal positions are added here.  Decoder: causal self-attention
+(cached) + cross-attention over encoder states + MLP.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.axes import shard
+from . import attention as attn
+from .layers import mlp_apply, mlp_spec, rms_norm
+from .params import ParamDef, Spec, stack_spec
+
+
+def _sinusoid(S, d):
+    pos = jnp.arange(S)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+def enc_block_spec(cfg: ArchConfig) -> Spec:
+    d = cfg.d_model
+    return {
+        "norm1": ParamDef((d,), ("embed",), init="ones"),
+        "mixer": attn.attn_spec(cfg),
+        "norm2": ParamDef((d,), ("embed",), init="ones"),
+        "ffn": mlp_spec(cfg),
+    }
+
+
+def dec_block_spec(cfg: ArchConfig) -> Spec:
+    d = cfg.d_model
+    return {
+        "norm1": ParamDef((d,), ("embed",), init="ones"),
+        "self": attn.attn_spec(cfg),
+        "norm_x": ParamDef((d,), ("embed",), init="ones"),
+        "cross": attn.attn_spec(cfg, cross=True),
+        "norm2": ParamDef((d,), ("embed",), init="ones"),
+        "ffn": mlp_spec(cfg),
+    }
+
+
+def encdec_spec(cfg: ArchConfig) -> Spec:
+    d = cfg.d_model
+    return {
+        "embed": {
+            "tok": ParamDef((cfg.vocab, d), ("vocab", "embed"), scale=1.0),
+            "final_norm": ParamDef((d,), ("embed",), init="ones"),
+            "head": ParamDef((d, cfg.vocab), ("embed", "vocab")),
+        },
+        "encoder": stack_spec(enc_block_spec(cfg), cfg.n_enc_layers, "layers"),
+        "enc_norm": ParamDef((d,), ("embed",), init="ones"),
+        "decoder": stack_spec(dec_block_spec(cfg), cfg.n_layers, "layers"),
+    }
+
+
+def encode(cfg: ArchConfig, params, frames):
+    """frames: [B, S_enc, d] precomputed frame embeddings (frontend stub)."""
+    B, S, d = frames.shape
+    x = frames + _sinusoid(S, d).astype(frames.dtype)[None]
+    x = shard(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(xcur, p):
+        h = rms_norm(xcur, p["norm1"], cfg.norm_eps)
+        y = attn.attention(cfg, p["mixer"], h, positions, causal=False,
+                           use_rope=False)
+        xcur = xcur + y
+        h = rms_norm(xcur, p["norm2"], cfg.norm_eps)
+        return xcur + mlp_apply(cfg, p["ffn"], h), None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv(cfg: ArchConfig, p_cross, enc_out):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p_cross["k"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p_cross["v"].astype(enc_out.dtype))
+    return k, v
+
+
+class DecCache(NamedTuple):
+    self_kv: attn.KVCache          # stacked [L, ...]
+    cross_k: jax.Array             # [L, B, S_enc, Hk, hd]
+    cross_v: jax.Array
+
+
+def precompute_cross(cfg: ArchConfig, params, enc_out):
+    def body(_, p):
+        k, v = _cross_kv(cfg, p["cross"], enc_out)
+        return None, (k, v)
+    _, (ks, vs) = jax.lax.scan(body, None, params["decoder"])
+    return ks, vs
+
+
+def decode_train(cfg: ArchConfig, params, tokens, enc_out):
+    """Teacher-forced decoder pass: tokens [B,S_dec]."""
+    x = jnp.take(params["embed"]["tok"], tokens, axis=0)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(xcur, p):
+        h = rms_norm(xcur, p["norm1"], cfg.norm_eps)
+        y = attn.attention(cfg, p["self"], h, positions)
+        xcur = xcur + y
+        h = rms_norm(xcur, p["norm_x"], cfg.norm_eps)
+        k, v = _cross_kv(cfg, p["cross"], enc_out)
+        xcur = xcur + attn.cross_attention_cached(cfg, p["cross"], h, k, v)
+        h = rms_norm(xcur, p["norm2"], cfg.norm_eps)
+        return xcur + mlp_apply(cfg, p["ffn"], h), None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    x = rms_norm(x, params["embed"]["final_norm"], cfg.norm_eps)
+    return (x @ params["embed"]["head"].astype(x.dtype)).astype(jnp.float32)
+
+
+def encdec_loss(cfg: ArchConfig, params, batch) -> Tuple[jax.Array, Dict]:
+    """batch: {"frames": [B,S_enc,d], "tokens": [B,S_dec]}"""
+    enc_out = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    logits = decode_train(cfg, params, inputs, enc_out)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(valid.sum(), 1)
+    loss = jnp.where(valid, nll, 0.0).sum() / denom
+    return loss, {"loss": loss, "aux_loss": jnp.zeros(()),
+                  "tokens": denom.astype(jnp.float32)}
+
+
+def init_dec_caches(cfg: ArchConfig, batch: int, enc_seq: int,
+                    dtype=jnp.bfloat16) -> DecCache:
+    L = cfg.n_layers
+    kv = attn.init_cache(cfg, batch, cfg.dec_max_seq, dtype)
+    stacked = attn.KVCache(
+        jnp.broadcast_to(kv.k[None], (L,) + kv.k.shape),
+        jnp.broadcast_to(kv.v[None], (L,) + kv.v.shape))
+    ck = jnp.zeros((L, batch, enc_seq, cfg.n_kv_heads, cfg.hd), dtype)
+    return DecCache(stacked, ck, jnp.zeros_like(ck))
+
+
+def dec_cache_axes(cfg: ArchConfig) -> DecCache:
+    kv = attn.KVCache(("layers", "batch", "seq", "kv_heads", "head_dim"),
+                      ("layers", "batch", "seq", "kv_heads", "head_dim"))
+    cx = ("layers", "batch", "seq_kv", "kv_heads", "head_dim")
+    return DecCache(kv, cx, cx)
+
+
+def serve_prefill(cfg: ArchConfig, params, frames, prompt):
+    """Encode audio + prefill decoder prompt.  Returns (logits, DecCache)."""
+    enc_out = encode(cfg, params, frames)
+    B = frames.shape[0]
+    cross_k, cross_v = precompute_cross(cfg, params, enc_out)
+    caches = init_dec_caches(cfg, B, frames.shape[1], frames.dtype)
+    caches = DecCache(caches.self_kv, cross_k.astype(frames.dtype),
+                      cross_v.astype(frames.dtype))
+
+    S = prompt.shape[1]
+    x = jnp.take(params["embed"]["tok"], prompt, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(xcur, xs):
+        p, kv, ck, cv = xs
+        h = rms_norm(xcur, p["norm1"], cfg.norm_eps)
+        y, kv = attn.prefill_attention(cfg, p["self"], h, positions, kv)
+        xcur = xcur + y
+        h = rms_norm(xcur, p["norm_x"], cfg.norm_eps)
+        xcur = xcur + attn.cross_attention_cached(cfg, p["cross"], h, ck, cv)
+        h = rms_norm(xcur, p["norm2"], cfg.norm_eps)
+        return xcur + mlp_apply(cfg, p["ffn"], h), kv
+
+    x, self_kv = jax.lax.scan(
+        body, x, (params["decoder"], caches.self_kv, caches.cross_k,
+                  caches.cross_v))
+    x = rms_norm(x[:, -1:], params["embed"]["final_norm"], cfg.norm_eps)
+    logits = (x @ params["embed"]["head"].astype(x.dtype)).astype(jnp.float32)
+    return logits[:, 0], DecCache(self_kv, caches.cross_k, caches.cross_v)
+
+
+def serve_decode_step(cfg: ArchConfig, params, token, pos, caches: DecCache):
+    """One decoder token with self-KV update + cross-attention over the
+    (fixed) encoder cache."""
+    x = jnp.take(params["embed"]["tok"], token, axis=0)
+
+    def body(xcur, xs):
+        p, kv, ck, cv = xs
+        h = rms_norm(xcur, p["norm1"], cfg.norm_eps)
+        y, kv = attn.decode_attention(cfg, p["self"], h, pos, kv)
+        xcur = xcur + y
+        h = rms_norm(xcur, p["norm_x"], cfg.norm_eps)
+        xcur = xcur + attn.cross_attention_cached(cfg, p["cross"], h, ck, cv)
+        h = rms_norm(xcur, p["norm2"], cfg.norm_eps)
+        return xcur + mlp_apply(cfg, p["ffn"], h), kv
+
+    x, self_kv = jax.lax.scan(
+        body, x, (params["decoder"], caches.self_kv, caches.cross_k,
+                  caches.cross_v))
+    x = rms_norm(x, params["embed"]["final_norm"], cfg.norm_eps)
+    logits = (x @ params["embed"]["head"].astype(x.dtype)).astype(jnp.float32)
+    return logits[:, 0], DecCache(self_kv, caches.cross_k, caches.cross_v)

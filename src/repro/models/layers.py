@@ -1,0 +1,154 @@
+"""Shared layer primitives: norms, rotary embeddings (RoPE + M-RoPE),
+MLP variants (SwiGLU / squared-ReLU / GELU), embeddings."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.axes import shard
+from .params import ParamDef, Spec
+
+
+def rms_norm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float = 1e6):
+    """x: [B, S, H, hd]; positions: [B, S] (int)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B,S,hd/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections: Tuple[int, int, int],
+                theta: float = 1e6):
+    """Multimodal RoPE (Qwen2-VL): the rotary frequency bands are split
+    into (temporal, height, width) sections, each rotated by its own
+    position stream.  positions3: [3, B, S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    sec = jnp.concatenate([
+        jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)])
+    sec = sec[: hd // 2]
+    # select per-band position stream: [B, S, hd/2]
+    p = jnp.moveaxis(positions3, 0, -1).astype(jnp.float32)  # [B,S,3]
+    band_pos = jnp.take_along_axis(
+        p, jnp.broadcast_to(sec[None, None, :], p.shape[:2] + sec.shape),
+        axis=-1)                                        # [B,S,hd/2]
+    angles = band_pos * freqs
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+def mlp_spec(cfg: ArchConfig, d_ff: Optional[int] = None) -> Spec:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act == "swiglu":
+        return {
+            "wi0": ParamDef((d, f), ("embed", "mlp")),
+            "wi1": ParamDef((d, f), ("embed", "mlp")),
+            "wo": ParamDef((f, d), ("mlp", "embed")),
+        }
+    return {
+        "wi": ParamDef((d, f), ("embed", "mlp")),
+        "wo": ParamDef((f, d), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(cfg: ArchConfig, p, x):
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["wi0"]) * (x @ p["wi1"])
+    elif cfg.act == "sq_relu":
+        h = jnp.square(jax.nn.relu(x @ p["wi"]))
+    else:
+        h = jax.nn.gelu(x @ p["wi"])
+    h = shard(h, "batch", "seq", "mlp")
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_spec(cfg: ArchConfig) -> Spec:
+    d = cfg.d_model
+    spec = {
+        "tok": ParamDef((cfg.vocab, d), ("vocab", "embed"), scale=1.0),
+        "final_norm": ParamDef((d,), ("embed",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        spec["head"] = ParamDef((d, cfg.vocab), ("embed", "vocab"))
+    return spec
+
+
+def embed_tokens(p, tokens):
+    x = jnp.take(p["tok"], tokens, axis=0)
+    return shard(x, "batch", "seq", "act_embed")
+
+
+def unembed(cfg: ArchConfig, p, x, eps=1e-6):
+    x = rms_norm(x, p["final_norm"], eps)
+    w = p["tok"].T if cfg.tie_embeddings else p["head"]
+    logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def chunked_ce(cfg: ArchConfig, p, hidden, labels, chunk: int = 512):
+    """Cross-entropy without materializing [B,S,vocab] logits: logits are
+    computed per sequence chunk inside a rematerialized scan (recomputed in
+    the backward pass).  labels < 0 are masked.  Returns (nll_sum, count).
+    """
+    x = rms_norm(hidden, p["final_norm"], cfg.norm_eps)
+    w = p["tok"].T if cfg.tie_embeddings else p["head"]
+    B, S, d = x.shape
+    c = max(1, min(chunk, S))
+    if S % c:                      # pad to a chunk multiple (masked labels)
+        pad = c - S % c
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        S += pad
+    nc = S // c
+    xc = jnp.moveaxis(x.reshape(B, nc, c, d), 1, 0)        # [nc,B,c,d]
+    lc = jnp.moveaxis(labels.reshape(B, nc, c), 1, 0)
+
+    def body(carry, xs):
+        nll_sum, cnt = carry
+        xb, lb = xs
+        logits = (xb @ w.astype(xb.dtype)).astype(jnp.float32)
+        logits = shard(logits, "batch", "seq", "vocab")
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)  # [B,c]
+        safe = jnp.where(lb >= 0, lb, 0)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        valid = lb >= 0
+        nll = jnp.where(valid, lse - gold, 0.0)
+        return (nll_sum + nll.sum(), cnt + valid.sum()), None
+
+    body = jax.checkpoint(body)
+    (nll_sum, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (xc, lc))
+    return nll_sum, cnt

@@ -1,0 +1,297 @@
+"""Decoder-only language models: dense, MoE, SSM (Mamba2), hybrid (Jamba),
+and VLM backbones — one parameter spec + three entry points per model:
+`forward_train`, `prefill`, `decode_step`.  Layers are stacked and scanned
+(`lax.scan`) so HLO size is O(1) in depth; remat policy per block.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.axes import shard
+from . import attention as attn
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from .layers import (chunked_ce, embed_spec, embed_tokens, mlp_apply,
+                     mlp_spec, rms_norm, unembed)
+from .params import ParamDef, Spec, stack_spec
+
+# ---------------------------------------------------------------------------
+# Block structure per family
+# ---------------------------------------------------------------------------
+
+
+def _layer_kinds(cfg: ArchConfig):
+    """Per-layer (mixer, ffn) kinds for one period (hybrid) or the whole
+    stack (homogeneous)."""
+    if cfg.family == "ssm":
+        return [("mamba", "none")]
+    if cfg.family == "hybrid":
+        kinds = []
+        for i in range(cfg.attn_period):
+            mixer = "attn" if i == cfg.attn_offset else "mamba"
+            ffn = "moe" if (cfg.moe_period and i % cfg.moe_period == 1) else "mlp"
+            kinds.append((mixer, ffn))
+        return kinds
+    ffn = "moe" if cfg.is_moe else "mlp"
+    return [("attn", ffn)]
+
+
+def block_spec(cfg: ArchConfig, mixer: str, ffn: str) -> Spec:
+    d = cfg.d_model
+    s: Spec = {"norm1": ParamDef((d,), ("embed",), init="ones")}
+    s["mixer"] = attn.attn_spec(cfg) if mixer == "attn" else ssm_lib.ssm_spec(cfg)
+    if ffn != "none":
+        s["norm2"] = ParamDef((d,), ("embed",), init="ones")
+        s["ffn"] = mlp_spec(cfg) if ffn == "mlp" else moe_lib.moe_spec(cfg)
+    return s
+
+
+def lm_spec(cfg: ArchConfig) -> Spec:
+    spec: Spec = {"embed": embed_spec(cfg)}
+    kinds = _layer_kinds(cfg)
+    if len(kinds) == 1:
+        spec["blocks"] = stack_spec(block_spec(cfg, *kinds[0]), cfg.n_layers,
+                                    "layers")
+    else:
+        period = {f"sub{i}": block_spec(cfg, m, f)
+                  for i, (m, f) in enumerate(kinds)}
+        n_periods = cfg.n_layers // len(kinds)
+        spec["blocks"] = stack_spec(period, n_periods, "layers")
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(cfg: ArchConfig, mixer: str, ffn: str, p, x, *,
+                 positions=None, positions3=None, cache=None,
+                 mode: str = "train", pos=None):
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    new_cache = cache
+    if mixer == "attn":
+        if mode == "train":
+            y = attn.attention(cfg, p["mixer"], h, positions, positions3)
+        elif mode == "prefill":
+            y, new_cache = attn.prefill_attention(cfg, p["mixer"], h,
+                                                  positions, cache, positions3)
+        else:
+            y, new_cache = attn.decode_attention(cfg, p["mixer"], h, pos,
+                                                 cache, positions3)
+    else:
+        if mode == "decode":
+            y, new_cache = ssm_lib.ssm_decode_step(cfg, p["mixer"], h, cache)
+        else:
+            y, new_cache = ssm_lib.ssm_apply(cfg, p["mixer"], h, cache)
+    x = x + y
+    aux = jnp.zeros((), jnp.float32)
+    if ffn != "none":
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if ffn == "mlp":
+            y = mlp_apply(cfg, p["ffn"], h)
+        else:
+            y, aux = moe_lib.moe_apply(cfg, p["ffn"], h)
+        x = x + y
+    return x, new_cache, aux
+
+
+def _remat(cfg: ArchConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+              if cfg.remat == "dots" else None)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _scan_stack(cfg: ArchConfig, blocks_p, x, per_layer_fn, caches=None):
+    """Scan over the stacked layer dim.  `per_layer_fn(x, p_l, cache_l) →
+    (x, new_cache_l, aux)`.  Returns (x, new_caches, aux_sum)."""
+    kinds = _layer_kinds(cfg)
+
+    if caches is None:
+        def body_nc(carry, p_l):
+            xcur, aux_acc = carry
+            xcur, _, aux = per_layer_fn(xcur, p_l, None)
+            return (xcur, aux_acc + aux), None
+
+        body_nc = _remat(cfg, body_nc)
+        (x, aux), _ = jax.lax.scan(
+            body_nc, (x, jnp.zeros((), jnp.float32)), blocks_p)
+        return x, None, aux
+
+    def body(carry, xs):
+        xcur, aux_acc = carry
+        p_l, cache_l = xs
+        xcur, new_cache, aux = per_layer_fn(xcur, p_l, cache_l)
+        return (xcur, aux_acc + aux), new_cache
+
+    body = _remat(cfg, body)
+    (x, aux), new_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (blocks_p, caches))
+    return x, new_caches, aux
+
+
+def _per_layer(cfg: ArchConfig, mode, positions=None, positions3=None,
+               pos=None):
+    kinds = _layer_kinds(cfg)
+
+    def fn(x, p_l, cache_l):
+        if len(kinds) == 1:
+            mixer, ffn = kinds[0]
+            return _apply_block(cfg, mixer, ffn, p_l, x, positions=positions,
+                                positions3=positions3, cache=cache_l,
+                                mode=mode, pos=pos)
+        # hybrid period: unrolled sub-layers
+        aux_t = jnp.zeros((), jnp.float32)
+        new_caches = {}
+        for i, (mixer, ffn) in enumerate(kinds):
+            sub = f"sub{i}"
+            c = cache_l[sub] if cache_l is not None else None
+            x, nc, aux = _apply_block(cfg, mixer, ffn, p_l[sub], x,
+                                      positions=positions,
+                                      positions3=positions3, cache=c,
+                                      mode=mode, pos=pos)
+            new_caches[sub] = nc
+            aux_t = aux_t + aux
+        return x, (new_caches if cache_l is not None else None), aux_t
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_seq: int,
+                dtype=jnp.bfloat16):
+    """Stacked per-layer caches matching the scan layout."""
+    kinds = _layer_kinds(cfg)
+
+    def one(mixer):
+        if mixer == "attn":
+            return attn.init_cache(cfg, batch, max_seq, dtype)
+        return ssm_lib.init_ssm_cache(cfg, batch, dtype)
+
+    def stack(tree, n):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n,) + a.shape),
+                            tree)
+
+    if len(kinds) == 1:
+        return stack(one(kinds[0][0]), cfg.n_layers)
+    period = {f"sub{i}": one(m) for i, (m, _) in enumerate(kinds)}
+    return stack(period, cfg.n_layers // len(kinds))
+
+
+def cache_axes(cfg: ArchConfig):
+    """Logical axes tree mirroring `init_caches` output."""
+    kinds = _layer_kinds(cfg)
+
+    def one(mixer):
+        if mixer == "attn":
+            return attn.KVCache(
+                ("layers", "batch", "seq_kv", "kv_heads", "head_dim"),
+                ("layers", "batch", "seq_kv", "kv_heads", "head_dim"))
+        return ssm_lib.SSMCache(
+            ("layers", "batch", "conv", None),
+            ("layers", "batch", "ssm_heads", "head_dim", "ssm_state"))
+
+    if len(kinds) == 1:
+        return one(kinds[0][0])
+    return {f"sub{i}": one(m) for i, (m, _) in enumerate(kinds)}
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def _positions3_default(positions):
+    return jnp.broadcast_to(positions[None], (3,) + positions.shape)
+
+
+def forward_hidden(cfg: ArchConfig, params, tokens, extra_embeds=None):
+    """tokens [B,S] (inputs); extra_embeds [B,Sv,d] optional multimodal
+    prefix.  Returns (hidden [B,S_total,d], aux_loss)."""
+    x = embed_tokens(params["embed"], tokens)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    positions3 = (_positions3_default(positions)
+                  if cfg.mrope_sections is not None else None)
+    x = shard(x, "batch", "seq", "act_embed")
+    fn = _per_layer(cfg, "train", positions, positions3)
+    x, _, aux = _scan_stack(cfg, params["blocks"], x, fn)
+    return x, aux
+
+
+def forward_train(cfg: ArchConfig, params, tokens, extra_embeds=None):
+    """Full-logits variant (tests / small models)."""
+    x, aux = forward_hidden(cfg, params, tokens, extra_embeds)
+    return unembed(cfg, params["embed"], x, cfg.norm_eps), aux
+
+
+def lm_loss(cfg: ArchConfig, params, batch) -> Tuple[jax.Array, Dict]:
+    """Causal LM loss via chunked CE (never materializes full logits).
+    batch: {"tokens": [B,S]} (+ "vision_embeds").
+
+    Inputs keep the full length S (last position's label is masked) rather
+    than slicing to S−1: power-of-two sequence lengths keep every chunked
+    path (CE, SSD, blockwise attention) exactly divisible and keep the
+    sequence shardable (EXPERIMENTS §Perf)."""
+    tokens = batch["tokens"]
+    inputs = tokens
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.full_like(tokens[:, :1], -1)], axis=1)
+    extra = batch.get("vision_embeds")
+    hidden, aux = forward_hidden(cfg, params, inputs, extra)
+    if extra is not None:
+        # no loss on the multimodal prefix
+        pad = jnp.full((labels.shape[0], extra.shape[1]), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    nll_sum, cnt = chunked_ce(cfg, params["embed"], hidden, labels)
+    denom = jnp.maximum(cnt, 1)
+    loss = nll_sum / denom
+    total = loss + cfg.router_aux_coef * aux
+    return total, {"loss": loss, "aux_loss": aux,
+                   "tokens": denom.astype(jnp.float32)}
+
+
+def prefill(cfg: ArchConfig, params, tokens, max_seq: int,
+            extra_embeds=None, caches=None):
+    """Prompt processing; writes K/V (or SSM state) caches.
+    Returns (logits_last [B,vocab], caches, seq_len)."""
+    x = embed_tokens(params["embed"], tokens)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    positions3 = (_positions3_default(positions)
+                  if cfg.mrope_sections is not None else None)
+    if caches is None:
+        caches = init_caches(cfg, B, max_seq)
+    fn = _per_layer(cfg, "prefill", positions, positions3)
+    x, caches, _ = _scan_stack(cfg, params["blocks"], x, fn, caches)
+    logits = unembed(cfg, params["embed"], x[:, -1:], cfg.norm_eps)
+    return logits[:, 0], caches, S
+
+
+def decode_step(cfg: ArchConfig, params, token, pos, caches):
+    """One decode step.  token [B,1] int32; pos [] int32 (current index).
+    Returns (logits [B,vocab], new_caches)."""
+    x = embed_tokens(params["embed"], token)
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    positions3 = (_positions3_default(positions)
+                  if cfg.mrope_sections is not None else None)
+    fn = _per_layer(cfg, "decode", positions, positions3, pos=pos)
+    x, caches, _ = _scan_stack(cfg, params["blocks"], x, fn, caches)
+    logits = unembed(cfg, params["embed"], x, cfg.norm_eps)
+    return logits[:, 0], caches

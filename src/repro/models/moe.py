@@ -1,0 +1,123 @@
+"""Mixture-of-Experts FFN with top-k routing and expert parallelism.
+
+Dispatch: capacity-bucketed one-hot einsum — MXU-friendly and
+GSPMD-shardable (experts on the `model`/EP axis); GSPMD lowers the
+sharded dispatch/combine contractions to the EP all-to-all pattern.  The
+grouping is sequence-aligned so capacity bucketing never crosses the
+batch sharding (see `moe_apply` and EXPERIMENTS §Perf).  The router has a
+fused Pallas kernel (`repro.kernels.moe_gating`).
+
+Router: softmax over experts, top-k, renormalized; load-balancing aux loss
+(Switch-style) returned alongside.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.axes import shard
+from .params import ParamDef, Spec
+
+
+def moe_spec(cfg: ArchConfig, d_ff: int | None = None) -> Spec:
+    d, f, E = cfg.d_model, d_ff or cfg.d_ff, cfg.n_experts
+    spec = {"router": ParamDef((d, E), ("embed", "expert"))}
+    if cfg.act == "swiglu":
+        spec.update({
+            "wi0": ParamDef((E, d, f), ("expert", "embed", "mlp")),
+            "wi1": ParamDef((E, d, f), ("expert", "embed", "mlp")),
+            "wo": ParamDef((E, f, d), ("expert", "mlp", "embed")),
+        })
+    else:
+        spec.update({
+            "wi": ParamDef((E, d, f), ("expert", "embed", "mlp")),
+            "wo": ParamDef((E, f, d), ("expert", "mlp", "embed")),
+        })
+    return spec
+
+
+def router_topk(cfg: ArchConfig, p, x) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (gate_weights [N,k], expert_idx [N,k], aux_loss []).
+    x: [N, d] flattened tokens."""
+    logits = (x @ p["router"].astype(x.dtype)).astype(jnp.float32)  # [N,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, cfg.top_k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E · Σ_e f_e · P_e
+    E = cfg.n_experts
+    me = jnp.mean(probs, axis=0)                               # [E]
+    ce = jnp.mean(
+        jax.nn.one_hot(idx, E, dtype=jnp.float32).sum(1), axis=0)
+    aux = E * jnp.sum(me * ce)
+    return gate.astype(x.dtype), idx, aux
+
+
+def moe_apply(cfg: ArchConfig, p, x, group_size: int = 512
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] → (y, aux_loss).
+
+    Group-local dense dispatch with **sequence-aligned groups**: each
+    group is a chunk of one batch row, so groups never straddle the batch
+    sharding — fixed token-block groups did, and GSPMD answered with
+    full-batch all-gathers of the activations per MoE layer plus 16×
+    redundant dispatch compute (EXPERIMENTS §Perf, moonshot iterations).
+    Groups also stay small (`group_size`): the one-hot dispatch matmul
+    costs 2·cf·ng·k·d FLOPs/token — linear in group size — so per-sequence
+    groups (ng=S) made dispatch dominate expert FFN compute.  The position
+    cumsum is group-local (no cross-device dependency).  Sequences are
+    padded to a group multiple; padded tokens get gate=0 and are never
+    dispatched.
+    """
+    B, S0, d = x.shape
+    ng = max(1, min(group_size, S0))
+    pad = (-S0) % ng
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    S = S0 + pad
+    N = B * S
+    G = N // ng
+    xg = x.reshape(G, ng, d)
+
+    gate, idx, aux = router_topk(cfg, p, xg.reshape(N, d))
+    if pad:
+        live = (jnp.arange(S) < S0)
+        gate = gate * jnp.broadcast_to(
+            live[None, :, None], (B, S, gate.shape[-1])).reshape(N, -1)
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(1, int(cfg.capacity_factor * ng * k / E))
+    gate = gate.reshape(G, ng, k)
+    idx = idx.reshape(G, ng, k)
+
+    onehot = jax.nn.one_hot(idx, E, dtype=x.dtype)              # [G,n,k,E]
+    # slot of each (token, choice) within its expert's group-local buffer
+    pos = jnp.cumsum(onehot.reshape(G, ng * k, E), axis=1) - 1.0
+    pos = (pos.reshape(G, ng, k, E) * onehot).sum(-1)           # [G,n,k]
+    keep = (pos < C) & (gate > 0)
+    pos = jnp.where(keep, pos, 0).astype(jnp.int32)
+
+    pos_oh = jax.nn.one_hot(pos, C, dtype=x.dtype) * keep[..., None].astype(x.dtype)
+    dispatch = jnp.einsum("gnke,gnkc->gnec", onehot, pos_oh)    # [G,n,E,C]
+    dispatch = shard(dispatch, "batch", None, "expert", "expert_cap")
+    expert_in = jnp.einsum("gnd,gnec->gecd", xg, dispatch)      # [G,E,C,d]
+    expert_in = shard(expert_in, "batch", "expert", "expert_cap", "embed")
+
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, p["wi0"])) * \
+            jnp.einsum("gecd,edf->gecf", expert_in, p["wi1"])
+    elif cfg.act == "sq_relu":
+        h = jnp.square(jax.nn.relu(
+            jnp.einsum("gecd,edf->gecf", expert_in, p["wi"])))
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", expert_in, p["wi"]))
+    h = shard(h, "batch", "expert", "expert_cap", "mlp")
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["wo"])       # [G,E,C,d]
+
+    combine = dispatch * jnp.einsum("gnk,gnke->gne", gate, onehot)[..., None]
+    y = jnp.einsum("gecd,gnec->gnd", expert_out, combine)
+    # constrain the combine output back to the sharded residual layout so
+    # the EP-boundary reduction lowers as reduce-scatter, not all-reduce
+    y = shard(y.reshape(B, S, d), "batch", "seq", "act_embed")
+    return y[:, :S0], aux

@@ -1,0 +1,75 @@
+"""Single-source-of-truth parameter specs.
+
+Every model builds a nested dict of `ParamDef`s (shape + logical axes +
+initializer).  From one spec we derive: materialized parameters
+(`init_params`), logical-axes trees (`axes_tree`) for GSPMD sharding,
+`jax.eval_shape`-compatible abstract params for the dry-run
+(`abstract_params`), and layer-stacked variants for `lax.scan`
+(`stack_spec`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones
+    scale: float | None = None    # default: 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Spec = Dict[str, Any]  # nested dict[str, ParamDef | Spec]
+
+
+def _map_spec(spec: Spec, fn):
+    return {k: (fn(v) if isinstance(v, ParamDef) else _map_spec(v, fn))
+            for k, v in spec.items()}
+
+
+def stack_spec(spec: Spec, n: int, axis_name: Optional[str] = None) -> Spec:
+    """Prepend a stacked-layer dimension to every param (for lax.scan)."""
+    return _map_spec(spec, lambda p: ParamDef(
+        (n,) + p.shape, (axis_name,) + p.axes, p.init, p.scale))
+
+
+def axes_tree(spec: Spec):
+    return _map_spec(spec, lambda p: p.axes)
+
+
+def abstract_params(spec: Spec, dtype=jnp.bfloat16):
+    return _map_spec(spec, lambda p: jax.ShapeDtypeStruct(p.shape, dtype))
+
+
+def n_params(spec: Spec) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(_map_spec(spec, lambda p: int(np.prod(p.shape)))):
+        total += leaf
+    return total
+
+
+def init_params(spec: Spec, key, dtype=jnp.bfloat16):
+    leaves, treedef = jax.tree.flatten(
+        _map_spec(spec, lambda p: p), is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, max(len(leaves), 1))
+
+    def make(p: ParamDef, k):
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, dtype)
+        if p.init == "ones":
+            return jnp.ones(p.shape, dtype)
+        fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+        scale = p.scale if p.scale is not None else 1.0 / math.sqrt(fan_in)
+        return (scale * jax.random.normal(k, p.shape, jnp.float32)).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [make(p, k) for p, k in zip(leaves, keys)])

@@ -1,0 +1,207 @@
+"""Mamba2 mixer via SSD — state-space duality (arXiv:2405.21060).
+
+TPU adaptation (DESIGN.md §3): the chunked SSD decomposition maps the
+intra-chunk work onto dense MXU matmuls and carries inter-chunk state with
+a cheap `lax.scan` — no warp-level primitives needed.  The intra-chunk
+core has a Pallas kernel (`repro.kernels.ssd_scan`) validated against this
+pure-jnp implementation.
+
+Layout: d_inner = expand·d_model = n_heads·head_dim; single B/C group
+(shared across heads, Mamba2 default).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.axes import shard
+from .layers import rms_norm
+from .params import ParamDef, Spec
+
+
+def ssm_spec(cfg: ArchConfig) -> Spec:
+    d, di, st, nh, K = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                        cfg.ssm_heads, cfg.ssm_conv)
+    return {
+        "in_z": ParamDef((d, di), ("embed", "ssm_inner")),
+        "in_x": ParamDef((d, di), ("embed", "ssm_inner")),
+        "in_b": ParamDef((d, st), ("embed", "ssm_state")),
+        "in_c": ParamDef((d, st), ("embed", "ssm_state")),
+        "in_dt": ParamDef((d, nh), ("embed", "ssm_heads")),
+        "conv_x": ParamDef((K, di), ("conv", "ssm_inner"), scale=0.5),
+        "conv_b": ParamDef((K, st), ("conv", "ssm_state"), scale=0.5),
+        "conv_c": ParamDef((K, st), ("conv", "ssm_state"), scale=0.5),
+        "a_log": ParamDef((nh,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamDef((nh,), ("ssm_heads",), init="zeros"),
+        "d_skip": ParamDef((nh,), ("ssm_heads",), init="ones"),
+        "gate_norm": ParamDef((di,), ("ssm_inner",), init="ones"),
+        "out": ParamDef((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv: x [B,S,F], w [K,F].  If `state` [B,K-1,F] is
+    given (decode), convolves the concatenation and returns new state."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(x[:, : K - 1])
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):]
+    return jax.nn.silu(out), new_state
+
+
+def _ssd_chunked(xdt, log_a, b, c, chunk: int):
+    """Chunked SSD scan.
+
+    xdt: [B,S,nh,hd] (dt-scaled inputs);  log_a: [B,S,nh] (per-step log
+    decay);  b, c: [B,S,st].  Returns y [B,S,nh,hd].
+    """
+    B, S0, nh, hd = xdt.shape
+    st = b.shape[-1]
+    Q = min(chunk, S0)
+    pad = (-S0) % Q
+    if pad:
+        # pad with identity steps (xdt=0, log_a=0) instead of shrinking Q —
+        # a non-divisible S must NOT degenerate the chunk size (Q=1 turns
+        # the chunked algorithm into a per-token scan; EXPERIMENTS §Perf).
+        zf = lambda t: jnp.pad(t, [(0, 0), (0, pad)] +
+                               [(0, 0)] * (t.ndim - 2))
+        xdt, log_a, b, c = zf(xdt), zf(log_a), zf(b), zf(c)
+    S = S0 + pad
+    nC = S // Q
+    rs = lambda t: t.reshape((B, nC, Q) + t.shape[2:])
+    xdt, log_a, b, c = rs(xdt), rs(log_a), rs(b), rs(c)
+
+    acum = jnp.cumsum(log_a, axis=2)                       # [B,nC,Q,nh]
+    # intra-chunk (dense, MXU): Y[q] = Σ_{k≤q} (C_q·B_k) e^{A_q−A_k} xdt[k]
+    # NOTE: built as 2-operand contractions only — 3-operand einsums here
+    # lower to rank-6 broadcast products ([B,nC,Q,Q,nh,hd]!) instead of
+    # batched matmuls (observed via the dry-run roofline; see EXPERIMENTS
+    # §Perf mamba2 iteration 0).
+    s_qk = jnp.einsum("bnqs,bnks->bnqk", c, b)             # [B,nC,Q,Q]
+    gap = acum[:, :, :, None, :] - acum[:, :, None, :, :]  # [B,nC,Q,Q,nh]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask BEFORE exp: the future-side gap is large-positive, and
+    # where(mask, exp(gap), 0) still differentiates through an inf → NaN
+    gap = jnp.where(causal[None, None, :, :, None], gap, -1e9)
+    decay = jnp.exp(gap)
+    w = s_qk[:, :, :, :, None].astype(jnp.float32) * decay  # [B,nC,Q,Q,nh]
+    y_intra = jnp.einsum("bnqkh,bnkhd->bnqhd", w,
+                         xdt.astype(jnp.float32))
+
+    # chunk summaries: H_n = Σ_k e^{A_Q−A_k} B_k ⊗ xdt_k   [B,nC,nh,hd,st]
+    tail = jnp.exp(acum[:, :, -1:, :] - acum)              # [B,nC,Q,nh]
+    xtail = xdt.astype(jnp.float32) * tail[..., None]      # [B,nC,Q,nh,hd]
+    h_chunk = jnp.einsum("bnqhd,bnqs->bnhds", xtail,
+                         b.astype(jnp.float32))
+    a_chunk = jnp.exp(acum[:, :, -1, :])                   # [B,nC,nh]
+
+    # inter-chunk recurrence (cheap scan over nC chunks)
+    def step(h, inp):
+        hc, ac = inp
+        h_new = h * ac[..., None, None] + hc
+        return h_new, h
+    h0 = jnp.zeros((B, nh, hd, st), jnp.float32)
+    _, h_prevs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(h_chunk, 1, 0), jnp.moveaxis(a_chunk, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                  # [B,nC,nh,hd,st]
+
+    y_inter = jnp.einsum("bnqs,bnhds->bnqhd",
+                         c.astype(jnp.float32), h_prevs) * \
+        jnp.exp(acum)[..., None]
+    y = (y_intra + y_inter).reshape(B, S, nh, hd)
+    return y[:, :S0]
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array    # [B, K-1, di + 2·st]
+    h: jax.Array       # [B, nh, hd, st] (f32)
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> SSMCache:
+    di, st, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    return SSMCache(
+        jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * st), dtype),
+        jnp.zeros((batch, nh, hd, st), jnp.float32))
+
+
+def _project(cfg: ArchConfig, p, x):
+    z = x @ p["in_z"]
+    xs = x @ p["in_x"]
+    b = x @ p["in_b"]
+    c = x @ p["in_c"]
+    dt = jax.nn.softplus((x @ p["in_dt"]).astype(jnp.float32) + p["dt_bias"])
+    return z, xs, b, c, dt
+
+
+def ssm_apply(cfg: ArchConfig, p, x, cache: SSMCache | None = None):
+    """Full-sequence Mamba2 mixer.  x: [B,S,d] → (y, new_cache or None)."""
+    B, S, d = x.shape
+    di, st, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    z, xs, b, c, dt = _project(cfg, p, x)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_b"], p["conv_c"]], -1)
+    feats = jnp.concatenate([xs, b, c], -1)
+    feats, conv_state = _causal_conv(feats, conv_w,
+                                     cache.conv if cache is not None else None)
+    xs, b, c = jnp.split(feats, [di, di + st], axis=-1)
+    xs = shard(xs, "batch", "seq", "ssm_inner")
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))           # [nh]
+    log_a = dt * a                                         # [B,S,nh]
+    xh = xs.reshape(B, S, nh, hd)
+    xdt = xh * dt[..., None].astype(xh.dtype)
+
+    if cfg.use_flash_kernel:
+        from ..kernels.ssd_scan import ops as ssd
+        y = ssd.ssd_scan(xdt, log_a, b, c, chunk=cfg.ssm_chunk)
+    else:
+        y = _ssd_chunked(xdt, log_a, b, c, cfg.ssm_chunk)
+    y = y + xh.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[:, None]
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = shard(y, "batch", "seq", "ssm_inner")
+
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = shard(y @ p["out"], "batch", "seq", "act_embed")
+    new_cache = None
+    if cache is not None:
+        # final ssm state for decode handoff
+        h = _final_state(xdt, log_a, b)
+        new_cache = SSMCache(conv_state.astype(cache.conv.dtype), h)
+    return out, new_cache
+
+
+def _final_state(xdt, log_a, b):
+    """h_S = Σ_k e^{A_S−A_k} B_k ⊗ xdt_k   (f32, [B,nh,hd,st])."""
+    acum = jnp.cumsum(log_a, axis=1)                       # [B,S,nh]
+    tail = jnp.exp(acum[:, -1:, :] - acum)
+    xtail = xdt.astype(jnp.float32) * tail[..., None]      # [B,S,nh,hd]
+    return jnp.einsum("bqhd,bqs->bhds", xtail, b.astype(jnp.float32))
+
+
+def ssm_decode_step(cfg: ArchConfig, p, x, cache: SSMCache):
+    """Single-token recurrent update.  x: [B,1,d]."""
+    B = x.shape[0]
+    di, st, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    z, xs, b, c, dt = _project(cfg, p, x)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_b"], p["conv_c"]], -1)
+    feats = jnp.concatenate([xs, b, c], -1)                # [B,1,F]
+    feats, conv_state = _causal_conv(feats, conv_w, cache.conv)
+    xs, b, c = jnp.split(feats, [di, di + st], axis=-1)
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt[:, 0] * a)                              # [B,nh]
+    xh = xs.reshape(B, nh, hd).astype(jnp.float32)
+    xdt = xh * dt[:, 0][..., None]
+    h = cache.h * da[..., None, None] + \
+        jnp.einsum("bhd,bs->bhds", xdt, b[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bhds,bs->bhd", h, c[:, 0].astype(jnp.float32))
+    y = y + xh * p["d_skip"].astype(jnp.float32)[:, None]
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return y @ p["out"], SSMCache(conv_state.astype(cache.conv.dtype), h)

@@ -1,0 +1,41 @@
+"""Elastic re-meshing: resume a job on a different device set.
+
+A checkpoint written under mesh A restores under mesh B by re-deriving
+shardings from the *logical axes* (which are mesh-independent) and
+`device_put`-ing each leaf — the standard recovery path when nodes are
+lost (shrink) or capacity is added (grow)."""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh
+
+from ..sharding import axes as ax
+
+
+def make_mesh_from(devices: Sequence, shape, axis_names) -> Mesh:
+    n = 1
+    for s in shape:
+        n *= s
+    if len(devices) < n:
+        raise ValueError(f"need {n} devices, have {len(devices)}")
+    return jax.make_mesh(shape, axis_names, devices=list(devices)[:n])
+
+
+def survivors_mesh(failed: Sequence[int], shape, axis_names) -> Mesh:
+    """Rebuild a (smaller) mesh after losing device indices `failed` —
+    simulates node loss on the host platform."""
+    alive = [d for i, d in enumerate(jax.devices()) if i not in set(failed)]
+    return make_mesh_from(alive, shape, axis_names)
+
+
+def reshard(tree: Any, axes_tree: Any, mesh: Mesh, rules: ax.Rules):
+    """Re-place every leaf under `mesh` according to its logical axes."""
+    abstract = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    shardings = ax.tree_shardings_matched(axes_tree, abstract, mesh, rules)
+    flat_x, treedef = jax.tree.flatten(tree)
+    flat_s = treedef.flatten_up_to(shardings)
+    return jax.tree.unflatten(
+        treedef, [jax.device_put(x, s) for x, s in zip(flat_x, flat_s)])

@@ -1,0 +1,94 @@
+"""Failure handling and straggler mitigation for long training runs.
+
+At fleet scale the failure model is: nodes die (checkpoint/restart),
+nodes slow down (stragglers → deadline-based detection and re-dispatch),
+and device sets change across restarts (elastic re-shard, see
+`runtime.elastic`).  This module provides the supervisor loop that a real
+multi-host launcher wraps around `jax.distributed` — exercised here with
+simulated failures (exceptions / injected delays).
+"""
+from __future__ import annotations
+
+import logging
+import statistics
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional
+
+log = logging.getLogger("repro.fault")
+
+
+class NodeFailure(RuntimeError):
+    """Raised by a step function when a worker is lost."""
+
+
+@dataclass
+class StragglerPolicy:
+    """Deadline-based straggler detection: a step slower than
+    `threshold × median` of the trailing window is flagged; after
+    `max_flags` consecutive flags the mitigation hook fires (on a real
+    fleet: re-dispatch the slow host's shard / drop to checkpoint)."""
+    window: int = 16
+    threshold: float = 2.5
+    max_flags: int = 3
+    _times: List[float] = field(default_factory=list)
+    _flags: int = 0
+    events: List[dict] = field(default_factory=list)
+
+    def observe(self, step: int, seconds: float) -> bool:
+        self._times.append(seconds)
+        self._times = self._times[-self.window:]
+        if len(self._times) < 4:
+            return False
+        med = statistics.median(self._times[:-1])
+        if seconds > self.threshold * med:
+            self._flags += 1
+            self.events.append({"step": step, "seconds": seconds,
+                                "median": med})
+            if self._flags >= self.max_flags:
+                self._flags = 0
+                return True
+        else:
+            self._flags = 0
+        return False
+
+
+@dataclass
+class Supervisor:
+    """Checkpoint/restart supervisor around a step function.
+
+    step_fn(state, step) -> (state, metrics); save_fn(step, state);
+    restore_fn() -> (state, step).
+    """
+    step_fn: Callable
+    save_fn: Callable
+    restore_fn: Callable
+    checkpoint_every: int = 50
+    max_restarts: int = 5
+    straggler: StragglerPolicy = field(default_factory=StragglerPolicy)
+    on_straggler: Optional[Callable] = None
+
+    def run(self, state, start_step: int, num_steps: int):
+        step = start_step
+        restarts = 0
+        history = []
+        while step < num_steps:
+            try:
+                t0 = time.time()
+                state, metrics = self.step_fn(state, step)
+                dt = time.time() - t0
+                if self.straggler.observe(step, dt) and self.on_straggler:
+                    self.on_straggler(step)
+                history.append(metrics)
+                step += 1
+                if step % self.checkpoint_every == 0:
+                    self.save_fn(step, state)
+            except NodeFailure as e:
+                restarts += 1
+                log.warning("node failure at step %d (%s); restart %d/%d",
+                            step, e, restarts, self.max_restarts)
+                if restarts > self.max_restarts:
+                    raise
+                state, step = self.restore_fn()
+        self.save_fn(step, state)
+        return state, step, history, restarts

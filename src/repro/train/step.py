@@ -1,0 +1,61 @@
+"""Training step factory: loss → grads → (optional compression) → AdamW.
+
+Supports gradient-accumulation microbatching (`accum_steps`) and
+error-feedback int8 gradient compression across the slow (pod/DCN) axis
+(`repro.optim.compression`) — both off by default for the graded dry-run
+baseline and exercised in tests / §Perf iterations.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.api import Model
+from ..optim import adamw
+
+
+def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig,
+                    accum_steps: int = 1,
+                    compressor=None) -> Callable:
+    """Returns train_step(params, opt_state, batch) →
+    (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def grads_of(params, batch):
+        if accum_steps <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        def micro(i, carry):
+            gacc, lacc = carry
+            mb = jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(
+                    x, i * (x.shape[0] // accum_steps),
+                    x.shape[0] // accum_steps, 0), batch)
+            (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            gacc = jax.tree.map(lambda a, b: a + b, gacc, g)
+            return gacc, lacc + loss
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        gacc, lsum = jax.lax.fori_loop(0, accum_steps, micro,
+                                       (zeros, jnp.zeros(())))
+        grads = jax.tree.map(lambda g: g / accum_steps, gacc)
+        loss = lsum / accum_steps
+        return loss, {"loss": loss}, grads
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = grads_of(params, batch)
+        if compressor is not None:
+            grads, opt_state = compressor(grads, opt_state)
+        params, opt_state, opt_metrics = adamw.update(
+            opt_cfg, grads, opt_state, params)
+        metrics = {**metrics, **opt_metrics}
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,144 @@
+"""Hierarchy, cost, projections, throughput, arrivals — paper §2/§5."""
+import numpy as np
+import pytest
+
+from repro.core import arrivals, cost, hierarchy as h, projections as proj
+from repro.core import throughput as tp
+
+
+class TestHierarchy:
+    def test_nameplate_capacities(self):
+        assert h.design_4n3().ha_capacity_kw == 7500
+        assert h.design_3p1().ha_capacity_kw == 7500
+        assert h.design_10n8().ha_capacity_kw == 20000
+        assert h.design_8p2().ha_capacity_kw == 20000
+
+    def test_row_wiring_feed_counts(self):
+        t = h.build_topology(h.design_4n3())
+        assert (t.row_nfeeds[~t.row_is_hd] == 2).all()   # App. C.2 LD
+        assert (t.row_nfeeds[t.row_is_hd] == 4).all()    # App. C.2 HD
+        tb = h.build_topology(h.design_3p1())
+        assert (tb.row_nfeeds == 1).all()                # block: 1 primary
+
+    def test_balanced_combos_4n3(self):
+        t = h.build_topology(h.design_4n3())
+        ld = t.row_feeds[~t.row_is_hd][:, :2]
+        combos, counts = np.unique(np.sort(ld, 1), axis=0, return_counts=True)
+        assert len(combos) == 6            # C(4,2)
+        assert (counts == counts[0]).all()  # balanced
+
+    def test_block_reserve_lineups_inactive(self):
+        t = h.build_topology(h.design_3p1())
+        assert t.lineup_is_active.sum() == 3
+        assert not np.isin(3, t.row_feeds)  # reserve feeds no row
+
+    def test_fleet_tiling_global_indices(self):
+        t = h.build_topology(h.design_4n3(), n_halls=3)
+        assert t.row_cap.shape[0] == 3 * 30
+        assert t.row_feeds.max() == 3 * 4 - 1
+        assert (t.row_hall == np.repeat([0, 1, 2], 30)).all()
+
+
+class TestCost:
+    def test_static_costs_match_paper(self):
+        c43 = cost.initial_dollars_per_mw(h.design_4n3())
+        c31 = cost.initial_dollars_per_mw(h.design_3p1())
+        assert abs(c43 / 1e6 - 10.0) < 0.25      # paper: $10M/MW
+        assert abs(c31 / 1e6 - 10.3) < 0.15      # paper: $10.3M/MW
+        assert 0.015 < c31 / c43 - 1 < 0.04      # ~3% static gap (§3.1)
+
+    def test_effective_cost_grows_with_stranding(self):
+        d = h.design_4n3()
+        base = cost.initial_dollars_per_mw(d)
+        eff = cost.effective_dollars_per_mw(d, n_halls=10,
+                                            deployed_mw=10 * 7.5 * 0.8)
+        assert eff > base
+        assert cost.stranding_cost_per_mw(d, 10, 10 * 7.5 * 0.8) > 0
+
+
+class TestProjections:
+    @pytest.mark.parametrize("year", sorted(proj.TABLE5_OBERON))
+    def test_table5_oberon(self, year):
+        for i, s in enumerate(proj.SCENARIOS):
+            assert proj.gpu_rack_kw(year, s) == proj.TABLE5_OBERON[year][i]
+
+    def test_table4_generative(self):
+        p = proj.pkg_perf(2030, "oberon")
+        assert abs(p["flops_pf"] - 84.5) < 0.5
+        assert abs(p["hbm_bw_tbps"] - 29.1) < 0.2
+        p = proj.pkg_perf(2034, "kyber")
+        assert abs(p["flops_pf"] - 482.7) < 2
+        assert abs(p["hbm_gb"] - 3906) < 10
+
+    def test_nongpu_endpoints(self):
+        assert abs(proj.compute_rack_kw(2034, proj.HIGH) - 52) < 0.5
+        assert abs(proj.storage_rack_kw(2034, proj.LOW) - 18) < 0.5
+        assert abs(proj.compute_rack_kw(2025, proj.MED) - 20) < 1e-6
+
+
+class TestThroughput:
+    def test_fig2_spread_exceeds_20x(self):
+        d = lambda: tp.Deployment(proj.KYBER, 2030, 1, "high")
+        small = tp.tps_per_watt(tp.MODELS["MoE-0.6T"], d())
+        big = tp.tps_per_watt(tp.MODELS["MoE-401T"], d())
+        assert small / big > 20
+
+    def test_pod_gain_monotone_in_model_size(self):
+        gains = []
+        for name in ("MoE-19T", "MoE-132T", "MoE-401T"):
+            m = tp.MODELS[name]
+            d1 = tp.Deployment(proj.KYBER, 2028, 1, "high")
+            d5 = tp.Deployment(proj.KYBER, 2028, 5, "high")
+            gains.append(tp.tps_per_watt(m, d5) / tp.tps_per_watt(m, d1) - 1)
+        assert gains[0] <= gains[1] <= gains[2]
+        assert gains[0] < 0.01 and gains[2] > 0.2
+
+    def test_decode_is_memory_or_comm_bound(self):
+        m = tp.MODELS["MoE-132T"]
+        d = tp.Deployment(proj.KYBER, 2028, 1, "high")
+        which, _ = tp.bottleneck(m, d, "dec")
+        assert which in ("memory", "comm")
+
+    def test_locality_model(self):
+        m = tp.MODELS["MoE-401T"]
+        d1 = tp.Deployment(proj.KYBER, 2028, 1, "high")
+        d7 = tp.Deployment(proj.KYBER, 2028, 7, "high")
+        assert tp.n_domains(m, d1) > 1
+        assert tp.f_ib(m, d7) <= tp.f_ib(m, d1)
+        assert tp.f_ib(m, d1) == 1 - 1 / tp.n_domains(m, d1)   # Eq. 13
+
+    def test_weight_bytes(self):
+        m = tp.MODELS["MoE-0.6T"]
+        expect = m.L * (4 * m.w ** 2 + m.E * 2 * m.w * m.FF)
+        assert m.w_total_bytes == expect
+        assert m.w_active_bytes < m.w_total_bytes
+
+
+class TestArrivals:
+    def test_envelope_total_power(self):
+        env = arrivals.EnvelopeSpec(demand_scale=0.02)
+        t = arrivals.generate_fleet_trace(env, seed=0)
+        total_gw = t.total_kw / 1e6
+        assert abs(total_gw - 0.2) / 0.2 < 0.1   # within 10% of 200 MW
+
+    def test_trace_fields(self):
+        env = arrivals.EnvelopeSpec(demand_scale=0.01, pod_racks=3)
+        t = arrivals.generate_fleet_trace(env, seed=1)
+        assert (t.lifetime_m >= 12).all()
+        assert (t.month[np.argsort(t.month, kind='stable')] == t.month).all()
+        assert t.is_pod[t.is_gpu].all()
+        assert (t.n_racks[t.is_gpu] == 3).all()
+        assert set(np.unique(t.class_id)) <= {0, 1, 2}
+
+    def test_sku_alphas_bounded(self):
+        env = arrivals.EnvelopeSpec(demand_scale=0.01)
+        t = arrivals.generate_fleet_trace(env, seed=2)
+        for year in (2026, 2030):
+            sel = t.is_gpu == False  # noqa: E712
+            assert t.rack_kw[sel].max() <= proj.compute_rack_kw(2034) + 1
+
+    def test_mixed_trace_power_share(self):
+        t = arrivals.sample_mixed_trace(3000, gpu_power_share=0.6, seed=3)
+        kw = t.rack_kw * t.n_racks
+        gpu_share = kw[t.is_gpu].sum() / kw.sum()
+        assert 0.45 < gpu_share < 0.75

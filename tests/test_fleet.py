@@ -1,0 +1,72 @@
+"""Fleet lifecycle simulator behaviour (paper §4.4/§6)."""
+import numpy as np
+import pytest
+
+from repro.core import hierarchy as h, projections as proj
+from repro.core.arrivals import EnvelopeSpec
+from repro.core.fleet import FleetConfig, run_fleet
+
+ENV = EnvelopeSpec(demand_scale=0.01, gpu_scenario=proj.HIGH)
+
+
+@pytest.fixture(scope="module")
+def results():
+    out = {}
+    for name in ("4N/3", "3+1"):
+        out[name] = run_fleet(FleetConfig(h.get_design(name), ENV, seed=3))
+    return out
+
+
+def test_all_arrivals_placed(results):
+    for r in results.values():
+        assert r.placed_fraction == 1.0
+
+
+def test_halls_grow_monotonically(results):
+    for r in results.values():
+        assert (np.diff(r.halls_active) >= 0).all()
+        assert r.n_halls_built >= 2
+
+
+def test_deployed_below_capacity(results):
+    for name, r in results.items():
+        cap = r.n_halls_built * h.get_design(name).ha_capacity_kw / 1e3
+        assert 0 < r.final_deployed_mw <= cap
+
+
+def test_stranding_bounded(results):
+    for r in results.values():
+        assert (r.p90_stranding >= 0).all() and (r.p90_stranding <= 1).all()
+        assert (r.final_hall_stranding >= -1e-3).all()
+
+
+def test_block_strands_more_at_high_tdp(results):
+    """The paper's headline (§3.1/Fig. 13): under High TDP, 3+1 strands
+    more and needs more halls than 4N/3 for the same demand."""
+    r43, r31 = results["4N/3"], results["3+1"]
+    assert r31.n_halls_built >= r43.n_halls_built
+    assert r31.effective_dpm > r43.effective_dpm
+
+
+def test_effective_exceeds_initial(results):
+    for r in results.values():
+        assert r.effective_dpm > r.initial_dpm
+
+
+def test_harvest_reduces_halls():
+    rh = run_fleet(FleetConfig(h.get_design("3+1"), ENV, harvest=True,
+                               seed=5))
+    rn = run_fleet(FleetConfig(h.get_design("3+1"), ENV, harvest=False,
+                               seed=5))
+    assert rh.n_halls_built <= rn.n_halls_built
+
+
+def test_scale_stability():
+    """Stranding fractions are demand-scale stable (DESIGN.md §4) —
+    the reduced-scale benchmarks represent the 10 GW study."""
+    p90 = []
+    for scale in (0.01, 0.02):
+        env = EnvelopeSpec(demand_scale=scale, gpu_scenario=proj.HIGH)
+        r = run_fleet(FleetConfig(h.get_design("3+1"), env, seed=7))
+        p90.append(r.p90_stranding[-1])
+    assert abs(p90[0] - p90[1]) < 0.12

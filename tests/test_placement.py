@@ -1,0 +1,118 @@
+"""Placement-engine behaviour: the paper's §3 worked examples."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hierarchy as h
+from repro.core import placement as pl
+from repro.core.resources import TIER_HA, TIER_LA
+
+
+def _uniform_state(topo, load_kw):
+    st = pl.init_state(topo)
+    X = topo.lineup_cap.shape[0]
+    return st._replace(lineup_ha=jnp.full((X,), load_kw),
+                       lineup_tot=jnp.full((X,), load_kw))
+
+
+class TestReserveFragmentation:
+    """§3.2: 10N/8, 18 MW uniform, 650 kW rack with k=4 feeds."""
+
+    def setup_method(self, _):
+        self.topo = h.build_topology(h.design_10n8())
+        self.jt = pl.jax_topology(self.topo)
+
+    def test_rejects_despite_aggregate_slack(self):
+        st = _uniform_state(self.topo, 1800.0)   # 2 MW aggregate headroom
+        dep = pl.Deployment.make(650.0, 1, is_gpu=True)
+        assert not bool(pl.row_feasible(self.jt, st, dep, 1).any())
+
+    def test_admits_below_threshold(self):
+        # headroom 220 kW > Δ = 650/3 ≈ 216.7 kW
+        st = _uniform_state(self.topo, 1780.0)
+        dep = pl.Deployment.make(650.0, 1, is_gpu=True)
+        assert bool(pl.row_feasible(self.jt, st, dep, 1).any())
+
+    def test_la_rack_consumes_reserve(self):
+        st = _uniform_state(self.topo, 1800.0)
+        dep = pl.Deployment.make(650.0, 1, is_gpu=True, tier=TIER_LA)
+        assert bool(pl.row_feasible(self.jt, st, dep, 1).any())
+
+
+class TestBlockQuantization:
+    """§3.3: block admits ⌊C/P⌋ deployments per line-up (Eq. 2)."""
+
+    @pytest.mark.parametrize("kw,per_lineup", [(800.0, 3), (1300.0, 1),
+                                               (600.0, 4)])
+    def test_floor_capacity(self, kw, per_lineup):
+        topo = h.build_topology(h.design_3p1())
+        jt = pl.jax_topology(topo)
+        st = pl.init_state(topo)
+        dep = pl.Deployment.make(kw, 1, is_gpu=True)
+        key = jax.random.PRNGKey(0)
+        n = 0
+        for i in range(20):
+            st, ok, _, _ = pl.place(jt, st, dep, pl.POLICY_VAR_MIN,
+                                    jax.random.fold_in(key, i))
+            if not bool(ok):
+                break
+            n += 1
+        assert n == 3 * per_lineup   # 3 active line-ups
+
+
+def test_release_restores_state():
+    topo = h.build_topology(h.design_4n3())
+    jt = pl.jax_topology(topo)
+    st0 = pl.init_state(topo)
+    dep = pl.Deployment.make(120.0, 5, is_gpu=False)
+    st1, ok, rows, counts = pl.place(jt, st0, dep, pl.POLICY_VAR_MIN,
+                                     jax.random.PRNGKey(0))
+    assert bool(ok)
+    st2 = pl.release_bulk(jt, st1, rows[None], counts[None],
+                          jnp.asarray([120.0]), jnp.asarray([False]),
+                          jnp.asarray([0]), jnp.asarray([1.0]))
+    for a, b in zip(jax.tree.leaves(st0._replace(rr_cursor=st2.rr_cursor)),
+                    jax.tree.leaves(st2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+
+
+def test_pod_atomic_and_same_domain():
+    topo = h.build_topology(h.design_10n8())
+    jt = pl.jax_topology(topo)
+    st = pl.init_state(topo)
+    dep = pl.Deployment.make(600.0, 5, is_gpu=True, is_pod=True)
+    st, ok, rows, counts = pl.place(jt, st, dep, pl.POLICY_VAR_MIN,
+                                    jax.random.PRNGKey(1))
+    assert bool(ok)
+    rows = np.asarray(rows)
+    doms = np.asarray(topo.row_domain)[rows[rows >= 0]]
+    assert len(set(doms.tolist())) == 1
+    assert float(np.asarray(counts).sum()) == 5.0
+
+
+def test_gpu_only_in_hd_rows():
+    topo = h.build_topology(h.design_4n3())
+    jt = pl.jax_topology(topo)
+    st = pl.init_state(topo)
+    dep = pl.Deployment.make(200.0, 1, is_gpu=True)
+    feas = pl.row_feasible(jt, st, dep, 1)
+    assert not bool((np.asarray(feas) & ~topo.row_is_hd).any())
+
+
+def test_never_exceeds_capacity_under_any_sequence():
+    topo = h.build_topology(h.design_4n3())
+    jt = pl.jax_topology(topo)
+    st = pl.init_state(topo)
+    key = jax.random.PRNGKey(2)
+    rng = np.random.default_rng(0)
+    for i in range(120):
+        kw = float(rng.uniform(10, 400))
+        gpu = bool(rng.random() < 0.4)
+        dep = pl.Deployment.make(kw, int(rng.integers(1, 6)), is_gpu=gpu)
+        st, ok, _, _ = pl.place(jt, st, dep, int(rng.integers(0, 4)),
+                                jax.random.fold_in(key, i))
+    assert bool((np.asarray(st.row_load) <=
+                 np.asarray(topo.row_cap) + 1e-2).all())
+    eff = topo.design.ha_frac * np.asarray(topo.lineup_cap)
+    assert bool((np.asarray(st.lineup_ha) <= eff + 1e-2).all())
