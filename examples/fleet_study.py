@@ -1,16 +1,18 @@
 """Fleet lifecycle study (paper §6.2–6.3, Figs. 13–15).
 
-Sweeps the four reference designs across GPU TDP scenarios and prints the
+Sweeps the four reference designs across GPU TDP scenarios as ONE
+batched sweep call (design × scenario vmapped lifecycle) and prints the
 lifecycle metrics that separate designs which look identical at
 commissioning.  Use --scale 1.0 for the full 10 GW study (hours).
 
     PYTHONPATH=src python examples/fleet_study.py [--scale 0.03]
 """
 import argparse
+import time
 
-from repro.core import cost, hierarchy, projections as proj
+from repro.core import hierarchy, projections as proj
 from repro.core.arrivals import EnvelopeSpec
-from repro.core.fleet import FleetConfig, run_fleet
+from repro.core.sweep import SweepAxes, sweep
 
 
 def main():
@@ -20,19 +22,27 @@ def main():
                     default=[proj.LOW, proj.MED, proj.HIGH])
     args = ap.parse_args()
 
+    names = ("4N/3", "3+1", "10N/8", "8+2")
+    combos = [(s, n) for s in args.scenarios for n in names]
+    axes = SweepAxes.zip(
+        designs=[hierarchy.get_design(n) for _, n in combos],
+        envs=[EnvelopeSpec(demand_scale=args.scale, gpu_scenario=s)
+              for s, _ in combos])
+    t0 = time.time()
+    res = sweep(axes)
+    wall = time.time() - t0
+
     print(f"{'design':8s} {'tdp':5s} {'halls':>6s} {'deployed':>9s} "
           f"{'P90str':>7s} {'init$/MW':>9s} {'eff$/MW':>9s} {'gap':>6s}")
-    for scenario in args.scenarios:
-        for name in ("4N/3", "3+1", "10N/8", "8+2"):
-            env = EnvelopeSpec(demand_scale=args.scale,
-                               gpu_scenario=scenario)
-            r = run_fleet(FleetConfig(hierarchy.get_design(name), env,
-                                      seed=0))
-            gap = r.effective_dpm / r.initial_dpm - 1
-            print(f"{name:8s} {scenario:5s} {r.n_halls_built:6d} "
-                  f"{r.final_deployed_mw:8.0f}M {r.p90_stranding[-1]:6.1%} "
-                  f"{r.initial_dpm/1e6:8.2f}M {r.effective_dpm/1e6:8.2f}M "
-                  f"{gap:6.1%}")
+    for i, (scenario, name) in enumerate(combos):
+        gap = res.effective_dpm[i] / res.initial_dpm[i] - 1
+        print(f"{name:8s} {scenario:5s} {res.n_halls_built[i]:6d} "
+              f"{res.final_deployed_mw[i]:8.0f}M "
+              f"{res.p90_stranding[i, -1]:6.1%} "
+              f"{res.initial_dpm[i]/1e6:8.2f}M "
+              f"{res.effective_dpm[i]/1e6:8.2f}M {gap:6.1%}")
+    print(f"# {len(combos)} configurations in one sweep call, "
+          f"{wall:.1f}s wall")
 
 
 if __name__ == "__main__":

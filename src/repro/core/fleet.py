@@ -3,24 +3,31 @@
 Places a multi-year arrival trace across a growing fleet of identical
 halls: opens a new hall when no feasible placement exists (instant
 commissioning, §4.2), harvests racks one year after deployment, and
-decommissions racks at end-of-life.  The monthly loop is host-side Python
-(108 iterations); each month's decommission/harvest/placement work runs as
-one jitted step over padded static shapes.
+decommissions racks at end-of-life.
+
+The whole lifecycle is ONE `jax.lax.scan` over months: hall-activation
+bookkeeping (`act_month`) lives in the scan carry, and the per-month
+p50/p90 stranding stats are post-hoc reductions over the scanned
+history.  `simulate_lifecycle` takes only device-typed arguments, so
+`sweep.py` can `vmap` it over a batch of (design, scenario, policy,
+seed) configurations; `run_fleet` is the thin single-configuration
+wrapper that preserves the original `FleetResult` interface.
 """
 from __future__ import annotations
 
 import functools
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import arrivals, cost, placement as pl
+from . import cost, placement as pl
 from .arrivals import EnvelopeSpec, Trace, generate_fleet_trace
 from .hierarchy import DesignSpec, build_topology
-from .placement import DEFAULT_POLICY, Deployment, MAX_POD_RACKS
+from .placement import (DEFAULT_POLICY, Deployment, JaxTopology,
+                        MAX_POD_RACKS)
 
 
 @dataclass
@@ -69,7 +76,269 @@ def _auto_halls(design: DesignSpec, env: EnvelopeSpec) -> int:
     return int(np.ceil(total_mw / (design.ha_capacity_kw / 1e3) * 1.45)) + 4
 
 
+class FleetTrace(NamedTuple):
+    """Device-side trace columns consumed by the lifecycle scan."""
+    month: jax.Array         # i32 [E]
+    rack_kw: jax.Array       # f32 [E]
+    n_racks: jax.Array       # i32 [E]
+    is_gpu: jax.Array        # bool [E]
+    is_pod: jax.Array        # bool [E]
+    tier: jax.Array          # i32 [E]
+    harvest_frac: jax.Array  # f32 [E]
+    lifetime_m: jax.Array    # i32 [E]
+
+    @staticmethod
+    def from_trace(trace: Trace, pad_to: int | None = None,
+                   pad_month: int = 0) -> "FleetTrace":
+        """Pad to `pad_to` events with never-arriving placeholders
+        (month = `pad_month`, which must be ≥ the simulated horizon)."""
+        E = len(trace)
+        n_pad = max(0, (pad_to or E) - E)
+
+        def col(name, fill):
+            a = np.asarray(getattr(trace, name))
+            if n_pad:
+                a = np.concatenate([a, np.full((n_pad,), fill, a.dtype)])
+            return jnp.asarray(a)
+
+        return FleetTrace(
+            month=col("month", pad_month),
+            rack_kw=col("rack_kw", 0.0),
+            n_racks=col("n_racks", 1),
+            is_gpu=col("is_gpu", False),
+            is_pod=col("is_pod", False),
+            tier=col("tier", 0),
+            harvest_frac=col("harvest_frac", 0.0),
+            lifetime_m=col("lifetime_m", 10 ** 6),
+        )
+
+
+def _month_e_max(trace: Trace, months: int) -> int:
+    """Largest per-month event count (the inner scan length)."""
+    starts = np.searchsorted(trace.month, np.arange(months))
+    ends = np.searchsorted(trace.month, np.arange(months), side="right")
+    return max(1, int((ends - starts).max()))
+
+
+def _month_slices(trace: Trace, months: int, e_max: int | None = None,
+                  modulo: int | None = None):
+    """Per-month event-index windows [M, e_max] plus validity mask.
+    `modulo` must equal the (padded) device trace length."""
+    starts = np.searchsorted(trace.month, np.arange(months))
+    ends = np.searchsorted(trace.month, np.arange(months), side="right")
+    e_max = e_max or max(1, int((ends - starts).max()))
+    idx = starts[:, None] + np.arange(e_max)[None, :]       # [M, e_max]
+    valid = idx < ends[:, None]
+    E = modulo or max(1, len(trace))
+    return (idx % E).astype(np.int32), valid, e_max
+
+
+class SimOutputs(NamedTuple):
+    """Device outputs of one lifecycle (leading batch dim under vmap)."""
+    halls_active: jax.Array         # [M] i32
+    deployed_kw: jax.Array          # [M] f32
+    p50_stranding: jax.Array        # [M] f32
+    p90_stranding: jax.Array        # [M] f32
+    final_hall_stranding: jax.Array    # [H] f32
+    final_lineup_stranding: jax.Array  # [X] f32
+    n_halls_built: jax.Array        # [] i32
+    final_deployed_kw: jax.Array    # [] f32
+    placed_fraction: jax.Array      # [] f32
+
+
+def _masked_percentiles(x, mask, qs):
+    """np.percentile('linear') over x[mask] for each static q in `qs`
+    (one shared sort); needs ≥1 masked element."""
+    s = jnp.sort(jnp.where(mask, x, jnp.inf))
+    top = (jnp.maximum(jnp.sum(mask), 1) - 1).astype(jnp.float32)
+    out = []
+    for q in qs:
+        pos = q / 100.0 * top
+        lo = jnp.floor(pos).astype(jnp.int32)
+        hi = jnp.ceil(pos).astype(jnp.int32)
+        frac = pos - lo.astype(jnp.float32)
+        out.append(s[lo] * (1.0 - frac) + s[hi] * frac)
+    return tuple(out)
+
+
+_NEW_HALL_BIAS = 1e6   # keeps placements in existing halls when feasible
+
+
+def simulate_lifecycle(jt: JaxTopology, ft: FleetTrace, idx, valid, policy,
+                       seed, h_cap, n_real, *, harvest: bool,
+                       mature_months: int,
+                       with_pods: bool = True) -> SimOutputs:
+    """Run the full monthly lifecycle as a single `lax.scan`.
+
+    All positional arguments are device-typed (vmap-able); `harvest`,
+    `mature_months` and `with_pods` are static.  `h_cap` caps hall
+    opening per configuration (padded fleets share a larger static hall
+    count).  `with_pods=False` (trace has no multi-row pods) replaces the
+    try-then-open-a-hall retry with one biased placement attempt over
+    `halls < n+1` — exactly equivalent for single-row clusters (a failed
+    first attempt means no existing-hall row is feasible, so the biased
+    argmin picks the same row either way) and roughly an order of
+    magnitude cheaper under `vmap`, where `lax.cond` runs both branches.
+    """
+    H = jt.hall_liq_cap.shape[0]
+    E = ft.month.shape[0]
+    M = idx.shape[0]
+
+    state = pl.init_state_from(jt)
+    reg_rows = jnp.full((E, MAX_POD_RACKS), -1, jnp.int32)
+    reg_counts = jnp.zeros((E, MAX_POD_RACKS), jnp.float32)
+    placed = jnp.zeros((E,), bool)
+    harvested = jnp.zeros((E,), bool)
+    removed = jnp.zeros((E,), bool)
+    n_active = jnp.asarray(1, jnp.int32)
+    act_month = jnp.full((H,), -1, jnp.int32).at[0].set(0)
+    key = jax.random.PRNGKey(jnp.asarray(seed, jnp.int32) + 1)
+    policy = jnp.asarray(policy, jnp.int32)
+    h_cap = jnp.asarray(h_cap, jnp.int32)
+
+    def month_step(carry, xs):
+        (state, reg_rows, reg_counts, placed, harvested, removed,
+         n_active, act_month) = carry
+        m, idx_m, valid_m = xs
+        mkey = jax.random.fold_in(key, m)
+
+        # ---- 1. decommission expired racks ----
+        expire = placed & ~removed & (ft.month + ft.lifetime_m <= m)
+        frac_dec = jnp.where(
+            expire, 1.0 - jnp.where(harvested, ft.harvest_frac, 0.0), 0.0)
+        state = pl.release_bulk(jt, state, reg_rows, reg_counts,
+                                ft.rack_kw, ft.is_gpu, ft.tier, frac_dec)
+        removed = removed | expire
+
+        # ---- 2. harvest one-year-old racks ----
+        if harvest:
+            h = placed & ~removed & ~harvested & (ft.month + 12 <= m)
+            state = pl.release_bulk(jt, state, reg_rows, reg_counts,
+                                    ft.rack_kw, ft.is_gpu, ft.tier,
+                                    jnp.where(h, ft.harvest_frac, 0.0))
+            harvested = harvested | h
+
+        # ---- 3. place this month's arrivals ----
+        def body(carry, i):
+            st, n_act, rr, rc, plcd = carry
+            e = idx_m[i]
+            dep = Deployment(ft.rack_kw[e], ft.n_racks[e], ft.is_gpu[e],
+                             ft.tier[e], ft.is_pod[e])
+            k = jax.random.fold_in(mkey, i)
+            n_try = jnp.minimum(n_act + 1, h_cap)
+
+            if with_pods:
+                def attempt(n):
+                    return pl.place(jt, st, dep, policy, k, jt.row_hall < n)
+
+                st1, ok1, rows1, counts1 = attempt(n_act)
+
+                def retry():
+                    st2, ok2, rows2, counts2 = attempt(n_try)
+                    return st2, ok2, rows2, counts2, n_try
+
+                st_f, ok_f, rows_f, counts_f, n_f = jax.lax.cond(
+                    ok1, lambda: (st1, ok1, rows1, counts1, n_act), retry)
+            else:
+                bias = jnp.where(jt.row_hall >= n_act, _NEW_HALL_BIAS, 0.0)
+                st_f, ok_f, row = pl.place_in_row(
+                    jt, st, dep, dep.n_racks, policy, k,
+                    jt.row_hall < n_try, score_bias=bias)
+                rows_f = jnp.full((MAX_POD_RACKS,), -1, jnp.int32
+                                  ).at[0].set(row)
+                counts_f = jnp.zeros((MAX_POD_RACKS,)).at[0].set(
+                    jnp.where(ok_f, dep.n_racks.astype(jnp.float32), 0.0))
+                in_existing = ok_f & (jt.row_hall[jnp.maximum(row, 0)]
+                                      < n_act)
+                n_f = jnp.where(in_existing, n_act, n_try)
+
+            live = valid_m[i]
+            ok_f = ok_f & live
+            st = pl._tree_where(ok_f, st_f, st)
+            n_act = jnp.where(live, n_f, n_act)
+            rr = rr.at[e].set(jnp.where(ok_f, rows_f, rr[e]))
+            rc = rc.at[e].set(jnp.where(ok_f, counts_f, rc[e]))
+            plcd = plcd.at[e].set(jnp.where(live, ok_f, plcd[e]))
+            return (st, n_act, rr, rc, plcd), None
+
+        (state, n_active, reg_rows, reg_counts, placed), _ = jax.lax.scan(
+            body, (state, n_active, reg_rows, reg_counts, placed),
+            jnp.arange(idx_m.shape[0]))
+
+        act_month = jnp.where(
+            (act_month < 0) & (jnp.arange(H) < n_active), m, act_month)
+        carry = (state, reg_rows, reg_counts, placed, harvested, removed,
+                 n_active, act_month)
+        return carry, (n_active, pl.deployed_kw(state),
+                       pl.hall_stranding(jt, state), act_month)
+
+    carry0 = (state, reg_rows, reg_counts, placed, harvested, removed,
+              n_active, act_month)
+    xs = (jnp.arange(M, dtype=jnp.int32), jnp.asarray(idx),
+          jnp.asarray(valid))
+    carry, (halls, deployed, hs_hist, am_hist) = jax.lax.scan(
+        month_step, carry0, xs)
+    state, placed = carry[0], carry[3]
+
+    # ---- post-hoc percentile reductions over the scanned history ----
+    def stats(hs, am, m):
+        mature = (am >= 0) & (am <= m - mature_months)
+        mask = jnp.where(jnp.any(mature), mature, am >= 0)
+        return _masked_percentiles(hs, mask, (50.0, 90.0))
+
+    p50, p90 = jax.vmap(stats)(hs_hist, am_hist,
+                               jnp.arange(M, dtype=jnp.int32))
+
+    # padding events are never placed, so the sum counts only real events
+    pf = jnp.sum(placed.astype(jnp.float32)) / \
+        jnp.maximum(jnp.asarray(n_real, jnp.float32), 1.0)
+    return SimOutputs(
+        halls_active=halls, deployed_kw=deployed,
+        p50_stranding=p50, p90_stranding=p90,
+        final_hall_stranding=pl.hall_stranding(jt, state),
+        final_lineup_stranding=pl.lineup_stranding(jt, state),
+        n_halls_built=carry[6], final_deployed_kw=pl.deployed_kw(state),
+        placed_fraction=pf)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("harvest", "mature_months", "with_pods"))
+def _simulate_jit(jt, ft, idx, valid, policy, seed, h_cap, n_real,
+                  harvest, mature_months, with_pods):
+    return simulate_lifecycle(jt, ft, idx, valid, policy, seed, h_cap,
+                              n_real, harvest=harvest,
+                              mature_months=mature_months,
+                              with_pods=with_pods)
+
+
+def make_fleet_result(out, months: int, lineups_per_hall: int,
+                      lineup_is_active: np.ndarray, design: DesignSpec,
+                      env: EnvelopeSpec) -> FleetResult:
+    """Host-side unpack of (per-configuration) `SimOutputs` into the
+    public `FleetResult` (shared by `run_fleet` and `sweep.result`)."""
+    na = int(out.n_halls_built)
+    hs = np.asarray(out.final_hall_stranding)
+    lstr = np.asarray(out.final_lineup_stranding)
+    active_lineups = np.arange(lstr.shape[0]) // lineups_per_hall < na
+    active_mask = np.asarray(lineup_is_active) & active_lineups
+    return FleetResult(
+        months=np.arange(months),
+        halls_active=np.asarray(out.halls_active),
+        deployed_mw=np.asarray(out.deployed_kw) / 1e3,
+        p50_stranding=np.asarray(out.p50_stranding),
+        p90_stranding=np.asarray(out.p90_stranding),
+        final_hall_stranding=hs[:na],
+        final_lineup_stranding=lstr[active_mask],
+        n_halls_built=na,
+        final_deployed_mw=float(out.final_deployed_kw) / 1e3,
+        placed_fraction=float(out.placed_fraction),
+        design=design, env=env,
+    )
+
+
 def run_fleet(cfg: FleetConfig, trace: Trace | None = None) -> FleetResult:
+    """Single-configuration lifecycle (thin wrapper over the scanned
+    engine; batched grids should use `repro.core.sweep.sweep`)."""
     design, env = cfg.design, cfg.env
     if trace is None:
         trace = generate_fleet_trace(env, cfg.seed)
@@ -77,133 +346,16 @@ def run_fleet(cfg: FleetConfig, trace: Trace | None = None) -> FleetResult:
     H = cfg.n_halls_max or _auto_halls(design, env)
     topo = build_topology(design, H)
     jt = pl.jax_topology(topo)
-    state = pl.init_state(topo)
+    ft = FleetTrace.from_trace(trace)
+    idx, valid, _ = _month_slices(trace, months)
 
-    E = len(trace)
-    # month slicing (trace sorted by month)
-    starts = np.searchsorted(trace.month, np.arange(months))
-    ends = np.searchsorted(trace.month, np.arange(months), side="right")
-    e_max = max(1, int((ends - starts).max()))
-
-    # device-side trace columns
-    tr = {f: jnp.asarray(getattr(trace, f)) for f in
-          ("rack_kw", "n_racks", "is_gpu", "is_pod", "tier",
-           "harvest_frac", "lifetime_m", "month")}
-
-    # registry (device): where each event's racks landed
-    reg_rows = jnp.full((E, MAX_POD_RACKS), -1, jnp.int32)
-    reg_counts = jnp.zeros((E, MAX_POD_RACKS), jnp.float32)
-    placed = jnp.zeros((E,), bool)
-    harvested = jnp.zeros((E,), bool)
-    removed = jnp.zeros((E,), bool)
-
-    row_hall = jnp.asarray(topo.row_hall)
-
-    @functools.partial(jax.jit, static_argnames=())
-    def step_month(state, reg_rows, reg_counts, placed, harvested, removed,
-                   n_active, month, idx, valid, key):
-        # ---- 1. decommission expired racks ----
-        expire = placed & ~removed & (tr["month"] + tr["lifetime_m"] <= month)
-        frac_dec = jnp.where(expire,
-                             1.0 - jnp.where(harvested, tr["harvest_frac"], 0.0),
-                             0.0)
-        state = pl.release_bulk(jt, state, reg_rows, reg_counts,
-                                tr["rack_kw"], tr["is_gpu"], tr["tier"],
-                                frac_dec)
-        removed = removed | expire
-
-        # ---- 2. harvest one-year-old racks ----
-        if cfg.harvest:
-            h = placed & ~removed & ~harvested & (tr["month"] + 12 <= month)
-            state = pl.release_bulk(jt, state, reg_rows, reg_counts,
-                                    tr["rack_kw"], tr["is_gpu"], tr["tier"],
-                                    jnp.where(h, tr["harvest_frac"], 0.0))
-            harvested = harvested | h
-
-        # ---- 3. place this month's arrivals ----
-        def body(carry, i):
-            st, n_act, rr, rc, plcd = carry
-            e = idx[i]
-            dep = Deployment(tr["rack_kw"][e], tr["n_racks"][e],
-                             tr["is_gpu"][e], tr["tier"][e], tr["is_pod"][e])
-            k = jax.random.fold_in(key, i)
-
-            def attempt(n):
-                active = row_hall < n
-                return pl.place(jt, st, dep, cfg.policy, k, active)
-
-            st1, ok1, rows1, counts1 = attempt(n_act)
-
-            def retry():
-                n2 = jnp.minimum(n_act + 1, H)
-                st2, ok2, rows2, counts2 = attempt(n2)
-                return st2, ok2, rows2, counts2, n2
-
-            st_f, ok_f, rows_f, counts_f, n_f = jax.lax.cond(
-                ok1, lambda: (st1, ok1, rows1, counts1, n_act), retry)
-
-            live = valid[i]
-            ok_f = ok_f & live
-            st = pl._tree_where(ok_f, st_f, st)
-            n_act = jnp.where(live, n_f, n_act)
-            rr = rr.at[e].set(jnp.where(ok_f, rows_f, rr[e]))
-            rc = rc.at[e].set(jnp.where(ok_f, counts_f, rc[e]))
-            plcd = plcd.at[e].set(jnp.where(live, ok_f, plcd[e]))
-            return (st, n_act, rr, rc, plcd), ok_f
-
-        (state, n_active, reg_rows, reg_counts, placed), oks = jax.lax.scan(
-            body, (state, n_active, reg_rows, reg_counts, placed),
-            jnp.arange(idx.shape[0]))
-
-        hall_str = pl.hall_stranding(jt, state)
-        deployed = pl.deployed_kw(state)
-        return (state, reg_rows, reg_counts, placed, harvested, removed,
-                n_active, hall_str, deployed)
-
-    key = jax.random.PRNGKey(cfg.seed + 1)
-    n_active = jnp.asarray(1, jnp.int32)
-    act_month = np.full((H,), -1, np.int64)
-    act_month[0] = 0
-
-    out = {k: [] for k in ("halls", "mw", "p50", "p90")}
-    for m in range(months):
-        s, e = int(starts[m]), int(ends[m])
-        idx = np.arange(s, s + e_max) % E
-        valid = np.arange(s, s + e_max) < e
-        (state, reg_rows, reg_counts, placed, harvested, removed, n_active,
-         hall_str, deployed) = step_month(
-            state, reg_rows, reg_counts, placed, harvested, removed,
-            n_active, jnp.asarray(m), jnp.asarray(idx), jnp.asarray(valid),
-            jax.random.fold_in(key, m))
-        na = int(n_active)
-        newly = np.where((act_month < 0) & (np.arange(H) < na))[0]
-        act_month[newly] = m
-
-        hs = np.asarray(hall_str)
-        mature = (act_month >= 0) & (act_month <= m - cfg.mature_months)
-        vals = hs[mature] if mature.any() else hs[act_month >= 0]
-        out["halls"].append(na)
-        out["mw"].append(float(deployed) / 1e3)
-        out["p50"].append(float(np.percentile(vals, 50)))
-        out["p90"].append(float(np.percentile(vals, 90)))
-
-    hs = np.asarray(pl.hall_stranding(jt, state))
-    na = int(n_active)
-    lineups_per_hall = topo.lineups_per_hall
-    lstr = np.asarray(pl.lineup_stranding(jt, state))
-    active_lineups = np.arange(lstr.shape[0]) < na * lineups_per_hall
-    active_mask = np.asarray(topo.lineup_is_active) & active_lineups
-
-    return FleetResult(
-        months=np.arange(months),
-        halls_active=np.asarray(out["halls"]),
-        deployed_mw=np.asarray(out["mw"]),
-        p50_stranding=np.asarray(out["p50"]),
-        p90_stranding=np.asarray(out["p90"]),
-        final_hall_stranding=hs[:na],
-        final_lineup_stranding=lstr[active_mask],
-        n_halls_built=na,
-        final_deployed_mw=float(pl.deployed_kw(state)) / 1e3,
-        placed_fraction=float(jnp.mean(placed.astype(jnp.float32))),
-        design=design, env=env,
-    )
+    out = _simulate_jit(jt, ft, jnp.asarray(idx), jnp.asarray(valid),
+                        jnp.asarray(cfg.policy, jnp.int32),
+                        jnp.asarray(cfg.seed, jnp.int32),
+                        jnp.asarray(H, jnp.int32),
+                        jnp.asarray(len(trace), jnp.int32),
+                        harvest=cfg.harvest,
+                        mature_months=cfg.mature_months,
+                        with_pods=bool(np.asarray(trace.is_pod).any()))
+    return make_fleet_result(out, months, topo.lineups_per_hall,
+                             topo.lineup_is_active, design, env)

@@ -104,17 +104,28 @@ class HallTopology:
 
     @property
     def rows_per_hall(self) -> int:
-        return self.design.n_rows
+        # derived from the arrays (≥ design.n_rows when padded for sweeps)
+        return self.row_cap.shape[0] // self.n_halls
 
     @property
     def lineups_per_hall(self) -> int:
-        return self.design.n_lineups
+        return self.lineup_cap.shape[0] // self.n_halls
 
     def ha_capacity_kw(self) -> float:
         return self.design.ha_capacity_kw * self.n_halls
 
 
-def build_topology(design: DesignSpec, n_halls: int = 1) -> HallTopology:
+def build_topology(design: DesignSpec, n_halls: int = 1,
+                   rows_per_hall: int | None = None,
+                   lineups_per_hall: int | None = None) -> HallTopology:
+    """Build the (possibly multi-hall) topology for `design`.
+
+    `rows_per_hall` / `lineups_per_hall` optionally pad every hall to a
+    common static shape so heterogeneous designs can be stacked and
+    `vmap`-ed together (sweep engine): padding rows have zero capacity and
+    no feeds (never feasible), padding line-ups are inactive with zero
+    rating (contribute nothing to stranding metrics).
+    """
     d = design
     if d.kind not in ("distributed", "block"):
         raise ValueError(f"unknown design kind {d.kind!r}")
@@ -168,9 +179,31 @@ def build_topology(design: DesignSpec, n_halls: int = 1) -> HallTopology:
     lineup_is_active = np.zeros((d.n_lineups,), bool)
     lineup_is_active[active] = True
 
+    # --- pad the single hall to a requested common shape (sweep batching) ---
+    R_pad = rows_per_hall or R
+    X_pad = lineups_per_hall or d.n_lineups
+    if R_pad < R or X_pad < d.n_lineups:
+        raise ValueError(
+            f"padding ({R_pad} rows, {X_pad} line-ups) smaller than design "
+            f"({R} rows, {d.n_lineups} line-ups)")
+    if R_pad > R:
+        pad = R_pad - R
+        row_cap = np.concatenate([row_cap, np.zeros((pad, N_RES), np.float32)])
+        row_feeds = np.concatenate(
+            [row_feeds, np.full((pad, MAX_FEEDS), -1, np.int32)])
+        row_nfeeds = np.concatenate([row_nfeeds, np.zeros((pad,), np.int32)])
+        row_is_hd = np.concatenate([row_is_hd, np.zeros((pad,), bool)])
+        row_domain = np.concatenate([row_domain, np.zeros((pad,), np.int32)])
+        R = R_pad
+    if X_pad > d.n_lineups:
+        pad = X_pad - d.n_lineups
+        lineup_cap = np.concatenate([lineup_cap, np.zeros((pad,), np.float32)])
+        lineup_is_active = np.concatenate(
+            [lineup_is_active, np.zeros((pad,), bool)])
+
     # --- tile over H halls with global indices ---
     H = n_halls
-    X = d.n_lineups
+    X = X_pad
     row_feeds_g = np.concatenate(
         [np.where(row_feeds >= 0, row_feeds + h * X, -1) for h in range(H)], 0)
     tile = lambda a: np.concatenate([a] * H, 0)

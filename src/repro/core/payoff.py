@@ -15,6 +15,7 @@ import numpy as np
 from . import fleet, projections as proj, throughput as tp
 from .arrivals import EnvelopeSpec
 from .hierarchy import DesignSpec
+from .sweep import SweepAxes, sweep
 
 
 @dataclass
@@ -48,14 +49,20 @@ def pod_payoff_study(design: DesignSpec, models: Sequence[tp.MoEModel],
                      ) -> list[PayoffPoint]:
     """Fleet-cost side is model-independent (the hierarchy sees only the
     placement quantum), so fleet sims are run once per pod size and reused
-    across models.  `fleet_cache` may be shared across designs' calls."""
+    across models — all missing pod sizes are evaluated in ONE batched
+    sweep call.  `fleet_cache` may be shared across designs' calls."""
     env = env or EnvelopeSpec(demand_scale=0.05, gpu_scenario=proj.HIGH,
                               pod_scale_arch=True)
     results: Dict[int, fleet.FleetResult] = fleet_cache if fleet_cache is not None else {}
-    for n in pod_sizes:
-        if n not in results:
-            e = replace(env, pod_racks=n)
-            results[n] = fleet.run_fleet(fleet.FleetConfig(design, e, seed=seed))
+    missing = [n for n in pod_sizes if n not in results]
+    if missing:
+        axes = SweepAxes.zip(designs=[design],
+                             envs=[replace(env, pod_racks=n)
+                                   for n in missing],
+                             seeds=[seed])
+        res = sweep(axes)
+        for i, n in enumerate(missing):
+            results[n] = res.result(i)
 
     base_cost = results[pod_sizes[0]].effective_dpm
     points = []

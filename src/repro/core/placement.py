@@ -84,9 +84,17 @@ class HallState(NamedTuple):
 
 
 def init_state(topo: HallTopology) -> HallState:
-    R = topo.row_cap.shape[0]
-    X = topo.lineup_cap.shape[0]
-    H = topo.n_halls
+    return _empty_state(topo.row_cap.shape[0], topo.lineup_cap.shape[0],
+                        topo.n_halls)
+
+
+def init_state_from(jt: JaxTopology) -> HallState:
+    """Empty state shaped after a device topology (usable inside jit/vmap)."""
+    return _empty_state(jt.row_cap.shape[0], jt.lineup_cap.shape[0],
+                        jt.hall_liq_cap.shape[0])
+
+
+def _empty_state(R: int, X: int, H: int) -> HallState:
     return HallState(
         row_load=jnp.zeros((R, N_RES), jnp.float32),
         lineup_ha=jnp.zeros((X,), jnp.float32),
@@ -205,11 +213,15 @@ def _apply_to_row(jt: JaxTopology, state: HallState, dep: Deployment,
 
 
 def place_in_row(jt: JaxTopology, state: HallState, dep: Deployment,
-                 n_in_row, policy, key, row_active):
+                 n_in_row, policy, key, row_active, score_bias=None):
     """Place `n_in_row` racks into the best feasible active row.
-    Returns (state', ok, row)."""
+    Returns (state', ok, row).  `score_bias` (per-row, finite, and large
+    relative to policy scores) expresses structural preferences among
+    feasible rows — e.g. the fleet engine's keep-to-existing-halls rule."""
     feas = row_feasible(jt, state, dep, n_in_row) & row_active
     score = row_scores(jt, state, dep, n_in_row, policy, key)
+    if score_bias is not None:
+        score = score + score_bias
     score = jnp.where(feas, score, _BIG)
     row = jnp.argmin(score)
     ok = feas[row]

@@ -1,0 +1,231 @@
+"""Batched fleet-sweep engine (paper §5–6 evaluation methodology).
+
+The paper's deployable-capacity claims are joint over designs, arrival
+scenarios, placement policies, and stochastic seeds — a grid of
+lifecycle simulations, not one run.  This module evaluates such a grid
+as ONE jitted + vmapped call: every configuration's topology is padded
+to a common static shape (`hierarchy.build_topology` padding), traces
+are padded to a common event count, and `fleet.simulate_lifecycle` is
+`vmap`-ed over the whole `SweepAxes` batch.
+
+    axes = SweepAxes.product(designs=[get_design("4N/3"), get_design("3+1")],
+                             envs=[EnvelopeSpec(gpu_scenario=s)
+                                   for s in ("med", "high")],
+                             seeds=(0, 1))
+    res = sweep(axes)                      # one compiled call, 8 configs
+    res.p90_stranding[i, -1], res.effective_dpm[i], res.result(i) ...
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+from dataclasses import dataclass
+from types import SimpleNamespace
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import cost, placement as pl
+from .arrivals import EnvelopeSpec, Trace, generate_fleet_trace
+from .fleet import (FleetConfig, FleetResult, FleetTrace, _auto_halls,
+                    _month_e_max, _month_slices, make_fleet_result,
+                    simulate_lifecycle)
+from .hierarchy import DesignSpec, build_topology
+from .placement import DEFAULT_POLICY
+
+
+def _broadcast(seq, B, name):
+    seq = list(seq)
+    if len(seq) == 1:
+        seq = seq * B
+    if len(seq) != B:
+        raise ValueError(f"{name} has length {len(seq)}, expected {B} or 1")
+    return seq
+
+
+@dataclass
+class SweepAxes:
+    """One entry per configuration: the batch the engine vmaps over."""
+    designs: List[DesignSpec]
+    envs: List[EnvelopeSpec]
+    policies: List[int]
+    seeds: List[int]
+
+    def __len__(self):
+        return len(self.designs)
+
+    def __post_init__(self):
+        B = max(len(self.designs), len(self.envs), len(self.policies),
+                len(self.seeds))
+        self.designs = _broadcast(self.designs, B, "designs")
+        self.envs = _broadcast(self.envs, B, "envs")
+        self.policies = [int(p) for p in _broadcast(self.policies, B,
+                                                    "policies")]
+        self.seeds = [int(s) for s in _broadcast(self.seeds, B, "seeds")]
+
+    @staticmethod
+    def zip(designs, envs, policies=(DEFAULT_POLICY,), seeds=(0,)
+            ) -> "SweepAxes":
+        """Aligned per-configuration sequences (length-1 broadcasts)."""
+        return SweepAxes(list(designs), list(envs), list(policies),
+                         list(seeds))
+
+    @staticmethod
+    def product(designs: Sequence[DesignSpec], envs: Sequence[EnvelopeSpec],
+                policies: Sequence[int] = (DEFAULT_POLICY,),
+                seeds: Sequence[int] = (0,)) -> "SweepAxes":
+        """Full grid, designs-major ordering."""
+        combos = list(itertools.product(designs, envs, policies, seeds))
+        return SweepAxes([c[0] for c in combos], [c[1] for c in combos],
+                         [c[2] for c in combos], [c[3] for c in combos])
+
+    def config(self, i: int, harvest: bool = True,
+               mature_months: int = 12) -> FleetConfig:
+        """The i-th configuration as a sequential `FleetConfig`."""
+        return FleetConfig(self.designs[i], self.envs[i],
+                           policy=self.policies[i], seed=self.seeds[i],
+                           harvest=harvest, mature_months=mature_months)
+
+
+@dataclass
+class SweepResult:
+    """Per-configuration metrics, leading axis = configuration."""
+    axes: SweepAxes
+    months: np.ndarray             # [M]
+    halls_active: np.ndarray       # [B, M]
+    deployed_mw: np.ndarray        # [B, M]
+    p50_stranding: np.ndarray      # [B, M]
+    p90_stranding: np.ndarray      # [B, M]
+    final_hall_stranding: np.ndarray    # [B, H_max] (use n_halls_built)
+    final_lineup_stranding: np.ndarray  # [B, X_tot]
+    lineup_is_active: np.ndarray   # [B, X_tot]
+    lineups_per_hall: int          # common padded per-hall line-up count
+    n_halls_built: np.ndarray      # [B] int
+    final_deployed_mw: np.ndarray  # [B]
+    placed_fraction: np.ndarray    # [B]
+    initial_dpm: np.ndarray        # [B] $/MW at commissioning
+    effective_dpm: np.ndarray      # [B] lifecycle-effective $/MW
+    total_capex: np.ndarray        # [B] $
+
+    def __len__(self):
+        return len(self.axes)
+
+    def result(self, i: int) -> FleetResult:
+        """Unpack configuration `i` into a sequential-style FleetResult."""
+        out = SimpleNamespace(  # per-configuration SimOutputs view
+            halls_active=self.halls_active[i],
+            deployed_kw=self.deployed_mw[i] * 1e3,
+            p50_stranding=self.p50_stranding[i],
+            p90_stranding=self.p90_stranding[i],
+            final_hall_stranding=self.final_hall_stranding[i],
+            final_lineup_stranding=self.final_lineup_stranding[i],
+            n_halls_built=self.n_halls_built[i],
+            final_deployed_kw=self.final_deployed_mw[i] * 1e3,
+            placed_fraction=self.placed_fraction[i])
+        return make_fleet_result(out, len(self.months),
+                                 self.lineups_per_hall,
+                                 self.lineup_is_active[i],
+                                 self.axes.designs[i], self.axes.envs[i])
+
+    def results(self) -> List[FleetResult]:
+        return [self.result(i) for i in range(len(self))]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("harvest", "mature_months", "with_pods"))
+def _sweep_jit(jt, ft, idx, valid, policy, seed, h_cap, n_real, harvest,
+               mature_months, with_pods):
+    fn = functools.partial(simulate_lifecycle, harvest=harvest,
+                           mature_months=mature_months, with_pods=with_pods)
+    return jax.vmap(fn)(jt, ft, idx, valid, policy, seed, h_cap, n_real)
+
+
+def sweep(axes: SweepAxes, harvest: bool = True, mature_months: int = 12,
+          n_halls_max: int = 0,
+          traces: Sequence[Trace] | None = None) -> SweepResult:
+    """Evaluate every configuration in `axes` in one compiled call.
+
+    All envelopes must share the same buildout horizon (the scan length).
+    Returns a `SweepResult`; `result(i)` recovers the `FleetResult` a
+    sequential `run_fleet(axes.config(i))` would produce (identical up to
+    float-padding noise for score-based policies).
+    """
+    B = len(axes)
+    if B == 0:
+        raise ValueError("empty sweep")
+    horizons = {(e.start_year, e.end_year) for e in axes.envs}
+    if len(horizons) != 1:
+        raise ValueError(f"envelopes span different horizons: {horizons}")
+    months = (axes.envs[0].end_year - axes.envs[0].start_year + 1) * 12
+
+    if traces is None:
+        traces = [generate_fleet_trace(e, s)
+                  for e, s in zip(axes.envs, axes.seeds)]
+    if len(traces) != B:
+        raise ValueError("need one trace per configuration")
+
+    # ---- pad to common static shapes, bucketed so that sweeps over new
+    # seeds/scenarios reuse the compiled executable (jit-cache hit) ----
+    def bucket(n, q):
+        return int(np.ceil(max(n, 1) / q) * q)
+
+    h_caps = [n_halls_max or _auto_halls(d, e)
+              for d, e in zip(axes.designs, axes.envs)]
+    H_max = bucket(max(h_caps), 4)
+    R_pad = max(d.n_rows for d in axes.designs)
+    X_pad = max(d.n_lineups for d in axes.designs)
+    topos = [build_topology(d, H_max, rows_per_hall=R_pad,
+                            lineups_per_hall=X_pad) for d in axes.designs]
+    jt = jax.tree.map(lambda *xs: jnp.stack(xs),
+                      *[pl.jax_topology(t) for t in topos])
+
+    E_max = bucket(max(len(t) for t in traces), 64)
+    ft = jax.tree.map(lambda *xs: jnp.stack(xs),
+                      *[FleetTrace.from_trace(t, pad_to=E_max,
+                                              pad_month=months)
+                        for t in traces])
+    e_max = bucket(max(_month_e_max(t, months) for t in traces), 4)
+    slices = [_month_slices(t, months, e_max=e_max, modulo=E_max)
+              for t in traces]
+    idx = jnp.asarray(np.stack([s[0] for s in slices]))
+    valid = jnp.asarray(np.stack([s[1] for s in slices]))
+
+    out = _sweep_jit(
+        jt, ft, idx, valid,
+        jnp.asarray(axes.policies, jnp.int32),
+        jnp.asarray(axes.seeds, jnp.int32),
+        jnp.asarray(h_caps, jnp.int32),
+        jnp.asarray([len(t) for t in traces], jnp.int32),
+        harvest=harvest, mature_months=mature_months,
+        with_pods=any(bool(np.asarray(t.is_pod).any()) for t in traces))
+
+    n_built = np.asarray(out.n_halls_built).astype(int)
+    deployed_mw = np.asarray(out.final_deployed_kw) / 1e3
+    initial = np.array([cost.initial_dollars_per_mw(d)
+                        for d in axes.designs])
+    effective = np.array([
+        cost.effective_dollars_per_mw(d, int(n), float(mw))
+        for d, n, mw in zip(axes.designs, n_built, deployed_mw)])
+    capex = np.array([int(n) * cost.hall_capex(d)
+                      for d, n in zip(axes.designs, n_built)])
+    return SweepResult(
+        axes=axes,
+        months=np.arange(months),
+        halls_active=np.asarray(out.halls_active),
+        deployed_mw=np.asarray(out.deployed_kw) / 1e3,
+        p50_stranding=np.asarray(out.p50_stranding),
+        p90_stranding=np.asarray(out.p90_stranding),
+        final_hall_stranding=np.asarray(out.final_hall_stranding),
+        final_lineup_stranding=np.asarray(out.final_lineup_stranding),
+        lineup_is_active=np.stack([np.asarray(t.lineup_is_active)
+                                   for t in topos]),
+        lineups_per_hall=X_pad,
+        n_halls_built=n_built,
+        final_deployed_mw=deployed_mw,
+        placed_fraction=np.asarray(out.placed_fraction),
+        initial_dpm=initial,
+        effective_dpm=effective,
+        total_capex=capex,
+    )

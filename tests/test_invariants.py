@@ -1,0 +1,108 @@
+"""Conservation/ordering invariants of the placement engine.
+
+For every reference design: placing a mixed trace and then releasing
+100% of everything placed must restore `init_state` exactly (power,
+air, liquid, tiles, line-up loads), and the load ordering
+`lineup_tot >= lineup_ha >= 0` must hold after every step.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import arrivals, hierarchy as h, placement as pl
+
+DESIGN_NAMES = ("4N/3", "3+1", "10N/8", "8+2")
+
+# jitted once per topology shape (4N/3 and 3+1 share one executable)
+_PLACE = jax.jit(pl.place)
+
+
+def _mixed_trace(n_events=28, seed=11):
+    # pods + LA tier + clusters: exercises every release path
+    return arrivals.sample_mixed_trace(
+        n_events, year=2028, seed=seed, pod_racks=3, quantum_racks=4,
+        la_fraction=0.3)
+
+
+def _place_trace(jt, state, trace, policy=pl.POLICY_VAR_MIN, seed=0,
+                 check=None):
+    key = jax.random.PRNGKey(seed)
+    rows, counts, placed = [], [], []
+    for i in range(len(trace)):
+        dep = pl.Deployment.make(
+            float(trace.rack_kw[i]), int(trace.n_racks[i]),
+            is_gpu=bool(trace.is_gpu[i]), tier=int(trace.tier[i]),
+            is_pod=bool(trace.is_pod[i]))
+        state, ok, r, c = _PLACE(jt, state, dep, policy,
+                                 jax.random.fold_in(key, i))
+        rows.append(r)
+        counts.append(c)
+        placed.append(bool(ok))
+        if check is not None:
+            check(state)
+    return state, jnp.stack(rows), jnp.stack(counts), np.asarray(placed)
+
+
+@pytest.mark.parametrize("name", DESIGN_NAMES)
+def test_place_release_restores_init_state(name):
+    topo = h.build_topology(h.get_design(name))
+    jt = pl.jax_topology(topo)
+    st0 = pl.init_state(topo)
+    trace = _mixed_trace()
+
+    state, rows, counts, placed = _place_trace(jt, st0, trace)
+    assert placed.any(), "trace placed nothing; test is vacuous"
+
+    frac = jnp.asarray(placed, jnp.float32)        # release 100% of placed
+    state = pl.release_bulk(jt, state, rows, counts,
+                            jnp.asarray(trace.rack_kw),
+                            jnp.asarray(trace.is_gpu),
+                            jnp.asarray(trace.tier), frac)
+
+    # conservation: all loads return to ≈ 0 (f32 accumulation noise only)
+    np.testing.assert_allclose(np.asarray(state.row_load),
+                               np.asarray(st0.row_load), atol=0.5)
+    np.testing.assert_allclose(np.asarray(state.lineup_ha),
+                               np.asarray(st0.lineup_ha), atol=0.05)
+    np.testing.assert_allclose(np.asarray(state.lineup_tot),
+                               np.asarray(st0.lineup_tot), atol=0.05)
+    np.testing.assert_allclose(np.asarray(state.hall_liq),
+                               np.asarray(st0.hall_liq), atol=0.05)
+
+
+@pytest.mark.parametrize("name", DESIGN_NAMES)
+def test_lineup_load_ordering_along_trace(name):
+    topo = h.build_topology(h.get_design(name))
+    jt = pl.jax_topology(topo)
+    trace = _mixed_trace(seed=23)
+
+    def check(state):
+        ha = np.asarray(state.lineup_ha)
+        tot = np.asarray(state.lineup_tot)
+        assert (ha >= -1e-3).all()
+        assert (tot >= ha - 1e-3).all()
+
+    _place_trace(jt, pl.init_state(topo), trace, seed=1, check=check)
+
+
+def test_partial_release_is_linear():
+    """Releasing fraction f then (1-f) equals releasing 1.0 outright."""
+    topo = h.build_topology(h.design_4n3())
+    jt = pl.jax_topology(topo)
+    st0 = pl.init_state(topo)
+    trace = _mixed_trace(n_events=10, seed=5)
+    state, rows, counts, placed = _place_trace(jt, st0, trace)
+
+    kw = jnp.asarray(trace.rack_kw)
+    gpu = jnp.asarray(trace.is_gpu)
+    tier = jnp.asarray(trace.tier)
+    f = 0.35 * jnp.asarray(placed, jnp.float32)
+    rest = (1.0 - 0.35) * jnp.asarray(placed, jnp.float32)
+    two_step = pl.release_bulk(jt, state, rows, counts, kw, gpu, tier, f)
+    two_step = pl.release_bulk(jt, two_step, rows, counts, kw, gpu, tier,
+                               rest)
+    one_step = pl.release_bulk(jt, state, rows, counts, kw, gpu, tier,
+                               jnp.asarray(placed, jnp.float32))
+    for a, b in zip(jax.tree.leaves(two_step), jax.tree.leaves(one_step)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=0.1)

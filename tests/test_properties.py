@@ -1,4 +1,8 @@
 """Hypothesis property tests on system invariants."""
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep, requirements-dev.txt
+
 import jax
 import jax.numpy as jnp
 import numpy as np

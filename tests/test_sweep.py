@@ -1,0 +1,111 @@
+"""Sweep-engine equivalence and regression tests.
+
+The batched engine pads topologies/traces to common shapes and vmaps
+`simulate_lifecycle`; for score-based policies (min-waste, var-min) the
+padding is provably inert, so each configuration of a sweep must
+reproduce the sequential `run_fleet` outputs within float tolerance.
+"""
+import numpy as np
+import pytest
+
+from repro.core import hierarchy as h, placement as pl, projections as proj
+from repro.core.arrivals import EnvelopeSpec
+from repro.core.fleet import FleetConfig, run_fleet
+from repro.core.sweep import SweepAxes, sweep
+
+SCALE = 0.01
+
+
+def _env(scenario):
+    return EnvelopeSpec(demand_scale=SCALE, gpu_scenario=scenario)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    axes = SweepAxes.zip(
+        designs=[h.get_design(n)
+                 for n in ("4N/3", "3+1", "4N/3", "10N/8")],
+        envs=[_env(proj.HIGH), _env(proj.HIGH), _env(proj.MED),
+              _env(proj.HIGH)],
+        policies=[pl.POLICY_VAR_MIN, pl.POLICY_VAR_MIN,
+                  pl.POLICY_MIN_WASTE, pl.POLICY_VAR_MIN],
+        seeds=[3, 3, 5, 7])
+    return axes, sweep(axes)
+
+
+def test_sweep_matches_sequential(batch):
+    axes, res = batch
+    assert len(res) >= 4
+    for i in range(len(axes)):
+        r = run_fleet(axes.config(i))
+        assert int(res.n_halls_built[i]) == r.n_halls_built
+        np.testing.assert_allclose(res.final_deployed_mw[i],
+                                   r.final_deployed_mw, rtol=1e-5)
+        np.testing.assert_allclose(res.placed_fraction[i],
+                                   r.placed_fraction, atol=1e-6)
+        np.testing.assert_allclose(res.deployed_mw[i], r.deployed_mw,
+                                   rtol=1e-5, atol=1e-3)
+        np.testing.assert_allclose(res.p50_stranding[i], r.p50_stranding,
+                                   atol=2e-3)
+        np.testing.assert_allclose(res.p90_stranding[i], r.p90_stranding,
+                                   atol=2e-3)
+        np.testing.assert_allclose(res.halls_active[i], r.halls_active)
+        np.testing.assert_allclose(res.effective_dpm[i], r.effective_dpm,
+                                   rtol=1e-5)
+
+
+def test_result_unpack_round_trips(batch):
+    """SweepResult.result(i) must produce a FleetResult whose fields are
+    self-consistent with the batched arrays (padding stripped)."""
+    axes, res = batch
+    for i in range(len(axes)):
+        fr = res.result(i)
+        assert fr.n_halls_built == int(res.n_halls_built[i])
+        assert fr.final_hall_stranding.shape == (fr.n_halls_built,)
+        assert fr.design is axes.designs[i]
+        # only line-ups of built halls survive the active mask
+        lph = res.lineups_per_hall
+        n_active_lineups = int(res.lineup_is_active[i][
+            :fr.n_halls_built * lph].sum())
+        assert fr.final_lineup_stranding.shape == (n_active_lineups,)
+        np.testing.assert_allclose(fr.p90_stranding,
+                                   res.p90_stranding[i])
+
+
+def test_sweep_axes_product_and_broadcast():
+    axes = SweepAxes.product(
+        designs=[h.get_design("4N/3"), h.get_design("3+1")],
+        envs=[_env(proj.MED)], seeds=(0, 1))
+    assert len(axes) == 4
+    assert {d.name for d in axes.designs} == {"4N/3", "3+1"}
+    z = SweepAxes.zip(designs=[h.get_design("4N/3")],
+                      envs=[_env(proj.MED), _env(proj.HIGH)])
+    assert len(z) == 2 and z.designs[0] is z.designs[1]
+    with pytest.raises(ValueError):
+        SweepAxes.zip(designs=[h.get_design("4N/3")] * 3,
+                      envs=[_env(proj.MED)] * 2)
+
+
+def test_sweep_rejects_mixed_horizons():
+    with pytest.raises(ValueError):
+        sweep(SweepAxes.zip(
+            designs=[h.get_design("4N/3")],
+            envs=[_env(proj.MED),
+                  EnvelopeSpec(demand_scale=SCALE, end_year=2030)]))
+
+
+def test_golden_regression():
+    """Fixed-seed headline numbers for one configuration (3+1, High TDP,
+    seed 3, 100 MW).  Guards the whole engine — trace generation,
+    placement, harvest/decommission bookkeeping, percentile stats —
+    against silent behavior drift."""
+    r = run_fleet(FleetConfig(h.get_design("3+1"), _env(proj.HIGH),
+                              seed=3))
+    assert r.n_halls_built == 14
+    assert r.placed_fraction == 1.0
+    np.testing.assert_allclose(r.final_deployed_mw, 77.8758, atol=0.01)
+    np.testing.assert_allclose(float(r.p50_stranding[-1]), 0.2407,
+                               atol=2e-3)
+    np.testing.assert_allclose(float(r.p90_stranding[-1]), 0.3062,
+                               atol=2e-3)
+    np.testing.assert_allclose(r.effective_dpm, 13.997e6, rtol=1e-3)
