@@ -15,12 +15,16 @@ container; the default 0.04 (400 MW) preserves every qualitative ranking
 
 Fleet lifecycles are served from `_FLEET_CACHE`, which the fig
 benchmarks fill in batches via the sweep engine (`repro.core.sweep`):
-each fig prefetches its whole configuration grid as one vmapped call.
-See benchmarks/README.md for the CSV schema.
+each fig prefetches its whole configuration grid as one vmapped call,
+sharded across all visible devices (`sharded_sweep`).  See
+benchmarks/README.md for the CSV schema and the sharded `sweep_speedup`
+mode.
 """
 from __future__ import annotations
 
 import argparse
+import os
+import subprocess
 import sys
 import time
 from dataclasses import replace
@@ -33,7 +37,7 @@ from repro.core import (arrivals, cost, fleet, hierarchy, payoff,
                         throughput as tp)
 from repro.core.arrivals import EnvelopeSpec
 from repro.core.fleet import FleetConfig, run_fleet
-from repro.core.sweep import SweepAxes, sweep
+from repro.core.sweep import SweepAxes, sharded_sweep, sweep
 
 REGISTRY = {}
 _FLEET_CACHE: Dict[tuple, fleet.FleetResult] = {}
@@ -66,8 +70,10 @@ def _env_of(r):
 def _prefetch(reqs):
     """Batch-evaluate all not-yet-cached fleet configurations through the
     sweep engine: one vmapped lifecycle call per (harvest, pods) group
-    instead of one host-driven run per configuration.  Pod-free groups
-    stay separate so they compile the cheap biased-placement path."""
+    instead of one host-driven run per configuration, sharded across all
+    visible devices (`sharded_sweep`; single-device passthrough on this
+    1-core container).  Pod-free groups stay separate so they compile the
+    cheap biased-placement path."""
     seen, miss = set(), []
     for r in reqs:
         k = tuple(sorted(r.items()))
@@ -83,7 +89,7 @@ def _prefetch(reqs):
             envs=[_env_of(r) for r in grp],
             seeds=[r["seed"] for r in grp])
         t0 = time.time()
-        res = sweep(axes, harvest=hv)
+        res = sharded_sweep(axes, harvest=hv)
         wall = (time.time() - t0) / len(grp)   # amortized per configuration
         for i, r in enumerate(grp):
             fr = res.result(i)
@@ -313,6 +319,65 @@ def table2_throughput():
              f"n_dom={tp.n_domains(m, d)};bottleneck={which}")
 
 
+def _speedup_grid(scale, seeds):
+    """Fresh 8-configuration (design × scenario × seed) grid shared by the
+    `sweep_speedup` legs; distinct seed pairs give distinct traces so the
+    bucketed jit cache, not the trace, is what carries between grids."""
+    combos = [(d, s, sd) for d in ("4N/3", "3+1")
+              for s in (proj.MED, proj.HIGH) for sd in seeds]
+    return combos, SweepAxes.zip(
+        designs=[hierarchy.get_design(d) for d, _, _ in combos],
+        envs=[EnvelopeSpec(demand_scale=scale, gpu_scenario=s)
+              for _, s, _ in combos],
+        seeds=[sd for _, _, sd in combos])
+
+
+def _sharded_probe(scale):
+    """Sharded-vs-single-device leg of `sweep_speedup`: requires ≥2
+    (possibly simulated) devices in THIS process.  Warms both paths on
+    one grid, then times a fresh grid each way and emits the ratio.
+    Traces are generated once per grid and shared by both legs, so the
+    (serial, host-side) trace synthesis cost does not dilute the
+    device-execution ratio."""
+    import jax
+
+    D = jax.device_count()
+    if D < 2:
+        emit("sweep.sharded_speedup", 0,
+             f"skipped=needs>=2_devices;n_devices={D}")
+        return
+
+    def traces_for(axes):
+        return [arrivals.generate_fleet_trace(e, s)
+                for e, s in zip(axes.envs, axes.seeds)]
+
+    _, warm_axes = _speedup_grid(scale, (201, 202))
+    warm_traces = traces_for(warm_axes)
+    sweep(warm_axes, traces=warm_traces)
+    sharded_sweep(warm_axes, traces=warm_traces)
+
+    combos, axes = _speedup_grid(scale, (203, 204))
+    traces = traces_for(axes)
+    t0 = time.time()
+    res_1 = sweep(axes, traces=traces)
+    t_single = time.time() - t0
+    t0 = time.time()
+    res_d = sharded_sweep(axes, traces=traces)
+    t_shard = time.time() - t0
+
+    dev = max(abs(float(res_d.final_deployed_mw[i]) -
+                  float(res_1.final_deployed_mw[i]))
+              / max(float(res_1.final_deployed_mw[i]), 1e-9)
+              for i in range(len(combos)))
+    emit("sweep.single_device", t_single / len(combos) * 1e6,
+         f"n_cfg={len(combos)};wall_s={t_single:.2f}")
+    emit("sweep.sharded", t_shard / len(combos) * 1e6,
+         f"n_cfg={len(combos)};n_devices={D};wall_s={t_shard:.2f}")
+    emit("sweep.sharded_speedup", 0,
+         f"single_over_sharded={t_single / t_shard:.2f}x;"
+         f"n_devices={D};max_rel_dev={dev:.2e}")
+
+
 @bench
 def sweep_speedup():
     """Acceptance (ISSUE 1): one jitted/vmapped sweep call evaluates an
@@ -321,24 +386,22 @@ def sweep_speedup():
     ratio is emitted.  A warm-up grid with different seeds runs first so
     both paths are measured on a FRESH grid: the bucketed sweep hits the
     jit cache, while sequential lifecycles recompile per trace shape —
-    exactly the workflow the sweep engine batches."""
+    exactly the workflow the sweep engine batches.
+
+    Acceptance (ISSUE 2): additionally emits the sharded-vs-single-device
+    ratio (`sweep.sharded_speedup`) on ≥2 devices.  When this process
+    sees only one device, the sharded leg re-runs in a subprocess with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=2`` (host devices
+    are time-sliced cores there, so the ratio measures overhead, not
+    speedup — real scaling needs real devices)."""
     scale = min(SCALE, 0.01)
 
-    def grid(seeds):
-        combos = [(d, s, sd) for d in ("4N/3", "3+1")
-                  for s in (proj.MED, proj.HIGH) for sd in seeds]
-        return combos, SweepAxes.zip(
-            designs=[hierarchy.get_design(d) for d, _, _ in combos],
-            envs=[EnvelopeSpec(demand_scale=scale, gpu_scenario=s)
-                  for _, s, _ in combos],
-            seeds=[sd for _, _, sd in combos])
-
-    _, warm_axes = grid((101, 102))
+    _, warm_axes = _speedup_grid(scale, (101, 102))
     t0 = time.time()
     sweep(warm_axes)
     t_compile = time.time() - t0
 
-    combos, axes = grid((103, 104))
+    combos, axes = _speedup_grid(scale, (103, 104))
     t0 = time.time()
     res = sweep(axes)
     t_batched = time.time() - t0
@@ -358,6 +421,21 @@ def sweep_speedup():
     emit("sweep.speedup", 0,
          f"seq_over_batched={t_seq / t_batched:.2f}x;"
          f"max_rel_dev={dev:.2e};halls_match={halls_ok}")
+
+    import jax
+    if jax.device_count() >= 2:
+        _sharded_probe(scale)
+    else:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                            " --xla_force_host_platform_device_count=2"
+                            ).strip()
+        r = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "--sharded-probe",
+             "--scale", str(SCALE)], env=env)
+        if r.returncode != 0:
+            emit("sweep.sharded_speedup", 0,
+                 f"error=probe_subprocess_rc{r.returncode}")
 
 
 @bench
@@ -379,8 +457,14 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--scale", type=float, default=0.04)
+    ap.add_argument("--sharded-probe", action="store_true",
+                    help="internal: run only the multi-device leg of "
+                         "sweep_speedup (expects forced host devices)")
     args = ap.parse_args(argv)
     SCALE = args.scale
+    if args.sharded_probe:
+        _sharded_probe(min(SCALE, 0.01))
+        return
     print("name,us_per_call,derived")
     for name, fn in REGISTRY.items():
         if args.only and args.only not in name:

@@ -5,14 +5,23 @@ batched sweep call (design × scenario vmapped lifecycle) and prints the
 lifecycle metrics that separate designs which look identical at
 commissioning.  Use --scale 1.0 for the full 10 GW study (hours).
 
+On a multi-device host the configuration grid is sharded across all
+visible devices (`sharded_sweep`); on one device it runs as a plain
+single-device sweep.  To simulate N CPU devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=2 \\
+        PYTHONPATH=src python examples/fleet_study.py
+
     PYTHONPATH=src python examples/fleet_study.py [--scale 0.03]
 """
 import argparse
 import time
 
+import jax
+
 from repro.core import hierarchy, projections as proj
 from repro.core.arrivals import EnvelopeSpec
-from repro.core.sweep import SweepAxes, sweep
+from repro.core.sweep import SweepAxes, sharded_sweep
 
 
 def main():
@@ -29,7 +38,7 @@ def main():
         envs=[EnvelopeSpec(demand_scale=args.scale, gpu_scenario=s)
               for s, _ in combos])
     t0 = time.time()
-    res = sweep(axes)
+    res = sharded_sweep(axes)
     wall = time.time() - t0
 
     print(f"{'design':8s} {'tdp':5s} {'halls':>6s} {'deployed':>9s} "
@@ -41,8 +50,8 @@ def main():
               f"{res.p90_stranding[i, -1]:6.1%} "
               f"{res.initial_dpm[i]/1e6:8.2f}M "
               f"{res.effective_dpm[i]/1e6:8.2f}M {gap:6.1%}")
-    print(f"# {len(combos)} configurations in one sweep call, "
-          f"{wall:.1f}s wall")
+    print(f"# {len(combos)} configurations in one sweep call over "
+          f"{jax.device_count()} device(s), {wall:.1f}s wall")
 
 
 if __name__ == "__main__":

@@ -338,7 +338,28 @@ def make_fleet_result(out, months: int, lineups_per_hall: int,
 
 def run_fleet(cfg: FleetConfig, trace: Trace | None = None) -> FleetResult:
     """Single-configuration lifecycle (thin wrapper over the scanned
-    engine; batched grids should use `repro.core.sweep.sweep`)."""
+    engine).
+
+    Builds the hall topology at its *exact* shape (no sweep padding),
+    generates (or takes) the arrival trace, and runs the jitted
+    `simulate_lifecycle` scan once.  This is the reference semantics the
+    sweep engine is tested against: for a grid of configurations use
+    `repro.core.sweep.sweep` (one vmapped call) or
+    `repro.core.sweep.sharded_sweep` (vmapped + sharded over devices),
+    whose `result(i)` reproduces this function's `FleetResult` up to
+    float-padding noise.
+
+    Args:
+        cfg: design/envelope/policy/seed bundle (see `FleetConfig`).
+        trace: optional pre-generated arrival trace; defaults to
+            `generate_fleet_trace(cfg.env, cfg.seed)`.
+
+    Returns:
+        `FleetResult` with monthly [M] trajectories (halls active,
+        deployed MW, p50/p90 mature-hall stranding), final per-hall
+        [n_halls_built] and per-active-line-up stranding, and the cost
+        roll-ups (`initial_dpm`, `effective_dpm`, `total_capex`).
+    """
     design, env = cfg.design, cfg.env
     if trace is None:
         trace = generate_fleet_trace(env, cfg.seed)

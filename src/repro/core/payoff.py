@@ -15,7 +15,7 @@ import numpy as np
 from . import fleet, projections as proj, throughput as tp
 from .arrivals import EnvelopeSpec
 from .hierarchy import DesignSpec
-from .sweep import SweepAxes, sweep
+from .sweep import SweepAxes, sharded_sweep
 
 
 @dataclass
@@ -50,7 +50,8 @@ def pod_payoff_study(design: DesignSpec, models: Sequence[tp.MoEModel],
     """Fleet-cost side is model-independent (the hierarchy sees only the
     placement quantum), so fleet sims are run once per pod size and reused
     across models — all missing pod sizes are evaluated in ONE batched
-    sweep call.  `fleet_cache` may be shared across designs' calls."""
+    sweep call (device-sharded when more than one device is visible).
+    `fleet_cache` may be shared across designs' calls."""
     env = env or EnvelopeSpec(demand_scale=0.05, gpu_scenario=proj.HIGH,
                               pod_scale_arch=True)
     results: Dict[int, fleet.FleetResult] = fleet_cache if fleet_cache is not None else {}
@@ -60,7 +61,7 @@ def pod_payoff_study(design: DesignSpec, models: Sequence[tp.MoEModel],
                              envs=[replace(env, pod_racks=n)
                                    for n in missing],
                              seeds=[seed])
-        res = sweep(axes)
+        res = sharded_sweep(axes)
         for i, n in enumerate(missing):
             results[n] = res.result(i)
 

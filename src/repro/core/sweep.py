@@ -14,6 +14,18 @@ are padded to a common event count, and `fleet.simulate_lifecycle` is
                              seeds=(0, 1))
     res = sweep(axes)                      # one compiled call, 8 configs
     res.p90_stranding[i, -1], res.effective_dpm[i], res.result(i) ...
+
+On a multi-device host, `sharded_sweep` splits the same batch over a 1-D
+device mesh (`repro.sharding.axes.CONFIG_AXIS`) with `shard_map`, so each
+device simulates only its own slab of configurations:
+
+    res = sharded_sweep(axes)              # == sweep(axes), D-way parallel
+
+The configuration axis is embarrassingly parallel (no cross-config
+collectives), so sharded and single-device results agree to float
+tolerance; on one device `sharded_sweep` is a passthrough to `sweep`.
+Simulated multi-device CPU runs use
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 """
 from __future__ import annotations
 
@@ -26,6 +38,7 @@ from typing import List, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
 
 from . import cost, placement as pl
 from .arrivals import EnvelopeSpec, Trace, generate_fleet_trace
@@ -34,6 +47,7 @@ from .fleet import (FleetConfig, FleetResult, FleetTrace, _auto_halls,
                     simulate_lifecycle)
 from .hierarchy import DesignSpec, build_topology
 from .placement import DEFAULT_POLICY
+from repro.sharding import axes as shax
 
 
 def _broadcast(seq, B, name):
@@ -47,7 +61,24 @@ def _broadcast(seq, B, name):
 
 @dataclass
 class SweepAxes:
-    """One entry per configuration: the batch the engine vmaps over."""
+    """The configuration batch the engine vmaps over.
+
+    Four aligned per-configuration lists of equal length ``B`` (the batch
+    size): configuration ``i`` is ``(designs[i], envs[i], policies[i],
+    seeds[i])``.  Length-1 lists broadcast to ``B`` in ``__post_init__``,
+    so ``SweepAxes.zip(designs=[d], envs=envs_list)`` reuses one design
+    across every envelope.
+
+    Construct with:
+
+    * `SweepAxes.zip` — aligned sequences, one entry per configuration.
+    * `SweepAxes.product` — the full cross product (designs-major
+      ordering: the seed axis varies fastest, designs slowest).
+
+    `config(i)` recovers the i-th configuration as a sequential
+    `fleet.FleetConfig`, which is how the equivalence tests compare a
+    sweep against `fleet.run_fleet`.
+    """
     designs: List[DesignSpec]
     envs: List[EnvelopeSpec]
     policies: List[int]
@@ -142,15 +173,43 @@ def _sweep_jit(jt, ft, idx, valid, policy, seed, h_cap, n_real, harvest,
     return jax.vmap(fn)(jt, ft, idx, valid, policy, seed, h_cap, n_real)
 
 
-def sweep(axes: SweepAxes, harvest: bool = True, mature_months: int = 12,
-          n_halls_max: int = 0,
-          traces: Sequence[Trace] | None = None) -> SweepResult:
-    """Evaluate every configuration in `axes` in one compiled call.
+@functools.partial(jax.jit,
+                   static_argnames=("harvest", "mature_months", "with_pods",
+                                    "mesh"))
+def _sharded_sweep_jit(jt, ft, idx, valid, policy, seed, h_cap, n_real,
+                       harvest, mature_months, with_pods, mesh):
+    """`_sweep_jit` with the configuration axis split over `mesh`: each
+    device vmaps only its own B/D slab.  No collectives — configurations
+    are independent — so out_specs keep everything config-sharded."""
+    fn = functools.partial(simulate_lifecycle, harvest=harvest,
+                           mature_months=mature_months, with_pods=with_pods)
+    spec = shax.config_spec()
+    sharded = shax.shard_map(jax.vmap(fn), mesh=mesh,
+                             in_specs=(spec,) * 8, out_specs=spec,
+                             check_vma=False)
+    return sharded(jt, ft, idx, valid, policy, seed, h_cap, n_real)
 
-    All envelopes must share the same buildout horizon (the scan length).
-    Returns a `SweepResult`; `result(i)` recovers the `FleetResult` a
-    sequential `run_fleet(axes.config(i))` would produce (identical up to
-    float-padding noise for score-based policies).
+
+def _prepare(axes: SweepAxes, n_halls_max: int,
+             traces: Sequence[Trace] | None):
+    """Host-side batch assembly shared by `sweep` and `sharded_sweep`.
+
+    Pads every configuration to common static shapes, **bucketed** so
+    sweeps over new seeds/scenarios reuse the compiled executable
+    (jit-cache hit):
+
+    * hall cap `H_max` — max auto-sized hall count, bucketed to 4;
+    * rows/line-ups per hall — max over designs (zero-capacity padding
+      rows are never feasible, padded line-ups are inactive);
+    * trace events `E_max` — max trace length, bucketed to 64
+      (padding events arrive at month `M`, beyond the horizon);
+    * per-month event window `e_max` — max monthly arrival count,
+      bucketed to 4.
+
+    Returns `(args, months, topos, X_pad, with_pods)` where `args` is the
+    8-tuple of stacked device inputs for `simulate_lifecycle` (leading
+    axis = configuration) and `topos` the per-configuration padded host
+    topologies.
     """
     B = len(axes)
     if B == 0:
@@ -166,8 +225,6 @@ def sweep(axes: SweepAxes, harvest: bool = True, mature_months: int = 12,
     if len(traces) != B:
         raise ValueError("need one trace per configuration")
 
-    # ---- pad to common static shapes, bucketed so that sweeps over new
-    # seeds/scenarios reuse the compiled executable (jit-cache hit) ----
     def bucket(n, q):
         return int(np.ceil(max(n, 1) / q) * q)
 
@@ -192,15 +249,19 @@ def sweep(axes: SweepAxes, harvest: bool = True, mature_months: int = 12,
     idx = jnp.asarray(np.stack([s[0] for s in slices]))
     valid = jnp.asarray(np.stack([s[1] for s in slices]))
 
-    out = _sweep_jit(
-        jt, ft, idx, valid,
-        jnp.asarray(axes.policies, jnp.int32),
-        jnp.asarray(axes.seeds, jnp.int32),
-        jnp.asarray(h_caps, jnp.int32),
-        jnp.asarray([len(t) for t in traces], jnp.int32),
-        harvest=harvest, mature_months=mature_months,
-        with_pods=any(bool(np.asarray(t.is_pod).any()) for t in traces))
+    args = (jt, ft, idx, valid,
+            jnp.asarray(axes.policies, jnp.int32),
+            jnp.asarray(axes.seeds, jnp.int32),
+            jnp.asarray(h_caps, jnp.int32),
+            jnp.asarray([len(t) for t in traces], jnp.int32))
+    with_pods = any(bool(np.asarray(t.is_pod).any()) for t in traces)
+    return args, months, topos, X_pad, with_pods
 
+
+def _finalize(out, axes: SweepAxes, months: int, topos, X_pad: int,
+              mature_months: int) -> SweepResult:
+    """Host-side unpack of batched `SimOutputs` + cost model into a
+    `SweepResult` (shared by `sweep` and `sharded_sweep`)."""
     n_built = np.asarray(out.n_halls_built).astype(int)
     deployed_mw = np.asarray(out.final_deployed_kw) / 1e3
     initial = np.array([cost.initial_dollars_per_mw(d)
@@ -229,3 +290,93 @@ def sweep(axes: SweepAxes, harvest: bool = True, mature_months: int = 12,
         effective_dpm=effective,
         total_capex=capex,
     )
+
+
+def sweep(axes: SweepAxes, harvest: bool = True, mature_months: int = 12,
+          n_halls_max: int = 0,
+          traces: Sequence[Trace] | None = None) -> SweepResult:
+    """Evaluate every configuration in `axes` in one compiled call.
+
+    All envelopes must share the same buildout horizon (the scan length).
+    Returns a `SweepResult`; `result(i)` recovers the `FleetResult` a
+    sequential `run_fleet(axes.config(i))` would produce (identical up to
+    float-padding noise for score-based policies).
+
+    Padding is provably inert for the exact single-configuration
+    semantics: padded rows have zero capacity (never feasible), padded
+    line-ups are inactive (excluded from stranding stats), and padded
+    trace events arrive after the simulated horizon.  Pod-free traces
+    compile the cheap biased-placement path: instead of the
+    try-then-open-a-hall `lax.cond` retry (which vmap evaluates on both
+    branches), a single `place_in_row` attempt with `score_bias` added to
+    rows of the not-yet-open hall picks the same row either way — a
+    failed first attempt means no existing-hall row was feasible, so the
+    biased argmin lands in the new hall exactly when the retry would.
+
+    Args:
+        axes: the configuration batch (see `SweepAxes`).
+        harvest: harvest one-year-old racks (static across the batch).
+        mature_months: hall age before it enters tail stranding stats.
+        n_halls_max: static hall cap; 0 auto-sizes per configuration.
+        traces: optional pre-generated per-configuration arrival traces
+            (defaults to `generate_fleet_trace(envs[i], seeds[i])`).
+    """
+    args, months, topos, X_pad, with_pods = _prepare(axes, n_halls_max,
+                                                     traces)
+    out = _sweep_jit(*args, harvest=harvest, mature_months=mature_months,
+                     with_pods=with_pods)
+    return _finalize(out, axes, months, topos, X_pad, mature_months)
+
+
+def sharded_sweep(axes: SweepAxes, harvest: bool = True,
+                  mature_months: int = 12, n_halls_max: int = 0,
+                  traces: Sequence[Trace] | None = None,
+                  devices: Sequence[jax.Device] | None = None
+                  ) -> SweepResult:
+    """`sweep`, with the configuration axis sharded over a device mesh.
+
+    The batch is split along `repro.sharding.axes.CONFIG_AXIS` of a 1-D
+    mesh over `devices` (default: all local devices) via `shard_map`:
+    each device receives only its own slab of padded topologies and
+    traces (`jax.device_put` with a config-sharded `NamedSharding`, so
+    slabs land on their device up front rather than being replicated)
+    and vmaps `simulate_lifecycle` over the B/D configurations it owns.
+    Configurations are independent, so results match single-device
+    `sweep` to float tolerance.
+
+    Grids whose size does not divide the device count are padded by
+    replicating configuration 0 up to the next multiple of D; the
+    replicas are dropped before `SweepResult` assembly, so remainder
+    grids return exactly `B` configurations.
+
+    With one device (or a length-1 batch) this is a passthrough to
+    `sweep`.  To exercise the sharded path on a single-CPU host, set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before the
+    first jax import.
+
+    Args: as `sweep`, plus
+        devices: devices to shard over (default `jax.devices()`).
+    """
+    devs = list(devices) if devices is not None else list(jax.devices())
+    if len(devs) <= 1 or len(axes) == 1:
+        return sweep(axes, harvest=harvest, mature_months=mature_months,
+                     n_halls_max=n_halls_max, traces=traces)
+
+    args, months, topos, X_pad, with_pods = _prepare(axes, n_halls_max,
+                                                     traces)
+    B, D = len(axes), len(devs)
+    B_pad = -(-B // D) * D
+    if B_pad != B:
+        def pad(x):
+            fill = jnp.broadcast_to(x[:1], (B_pad - B,) + x.shape[1:])
+            return jnp.concatenate([x, fill])
+        args = jax.tree.map(pad, args)
+
+    mesh = shax.config_mesh(devs)
+    args = jax.device_put(args, NamedSharding(mesh, shax.config_spec()))
+    out = _sharded_sweep_jit(*args, harvest=harvest,
+                             mature_months=mature_months,
+                             with_pods=with_pods, mesh=mesh)
+    if B_pad != B:
+        out = jax.tree.map(lambda x: x[:B], out)
+    return _finalize(out, axes, months, topos, X_pad, mature_months)

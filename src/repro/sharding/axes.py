@@ -4,18 +4,67 @@ Model code annotates parameters and activations with *logical* axis names;
 a rule set maps them onto physical mesh axes.  Rules are swappable per
 launch configuration (single-pod, multi-pod, long-context), which is how
 the §Perf hillclimb iterates sharding without touching model code.
+
+Besides the model meshes ("pod", "data", "model"), this module owns the
+fleet-sweep mesh: `repro.core.sweep.sharded_sweep` shards its
+embarrassingly-parallel configuration batch over a 1-D mesh whose single
+axis is `CONFIG_AXIS` (see `config_mesh` / `config_spec`), and the
+version-portable `shard_map` wrapper exported here is the one entry point
+the rest of the codebase uses.
 """
 from __future__ import annotations
 
 import contextlib
+import inspect
 import threading
 from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:                                  # jax ≥ 0.5 exports it at top level
+    from jax import shard_map as _shard_map
+except ImportError:                   # jax ≤ 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# the replication-check kwarg was renamed check_rep → check_vma in jax 0.7
+_CHECK_KW = ("check_vma"
+             if "check_vma" in inspect.signature(_shard_map).parameters
+             else "check_rep")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+    """Version-portable `shard_map` (top-level vs experimental import,
+    check_rep/check_vma kwarg rename)."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check_vma})
+
+
 AxisVal = Union[None, str, Tuple[str, ...]]
 Rules = Dict[str, AxisVal]
+
+# ---------------------------------------------------------------------------
+# Fleet-sweep configuration mesh (repro.core.sweep.sharded_sweep).
+# ---------------------------------------------------------------------------
+
+# Mesh-axis name for the sweep's configuration batch.  The batch is
+# embarrassingly parallel (one lifecycle per configuration, no cross-config
+# collectives), so the mesh is always 1-D over however many devices the
+# caller hands in.
+CONFIG_AXIS = "config"
+
+
+def config_mesh(devices: Optional[Sequence[jax.Device]] = None) -> Mesh:
+    """1-D device mesh over `devices` (default: all local devices) with the
+    single axis `CONFIG_AXIS`, for sharding a sweep's configuration batch."""
+    devs = list(devices) if devices is not None else list(jax.devices())
+    return jax.make_mesh((len(devs),), (CONFIG_AXIS,), devices=devs)
+
+
+def config_spec() -> P:
+    """PartitionSpec sharding the leading (configuration) axis over
+    `CONFIG_AXIS`; trailing dims replicated."""
+    return P(CONFIG_AXIS)
 
 # Baseline rule set for the production mesh ("pod", "data", "model").
 # DP over (pod×data); TP/EP/vocab over model; optimizer state additionally

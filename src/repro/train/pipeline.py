@@ -12,28 +12,13 @@ configs.
 """
 from __future__ import annotations
 
-import functools
-import inspect
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-try:                                  # jax ≥ 0.5 exports it at top level
-    from jax import shard_map as _shard_map
-except ImportError:                   # jax ≤ 0.4.x
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-# the replication-check kwarg was renamed check_rep → check_vma in jax 0.7
-_CHECK_KW = ("check_vma"
-             if "check_vma" in inspect.signature(_shard_map).parameters
-             else "check_rep")
-
-
-def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
-    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                      **{_CHECK_KW: check_vma})
+from repro.sharding.axes import shard_map
 
 
 def pipeline(fn_stage: Callable, mesh: Mesh, stage_axis: str = "stage",

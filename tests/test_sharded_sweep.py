@@ -1,0 +1,138 @@
+"""Multi-device sharded-sweep equivalence tests (CPU host devices).
+
+`sharded_sweep` shard_maps the configuration axis over a 1-D device mesh;
+configurations are independent, so every metric must match single-device
+`sweep` (tight tolerance) and sequential `run_fleet` (the PR 1 padding
+tolerances).
+
+These tests must force the device count BEFORE jax initializes; when the
+full suite runs in one process jax is usually already initialized with 1
+device — then the mesh tests skip.  CI exercises them by exporting
+``XLA_FLAGS=--xla_force_host_platform_device_count=2`` for the whole
+tier-1 run; standalone `pytest tests/test_sharded_sweep.py` forces it
+here.  The single-device passthrough test always runs."""
+import os
+import sys
+
+if "jax" not in sys.modules:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=2").strip()
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.core import hierarchy as h, placement as pl  # noqa: E402
+from repro.core import projections as proj  # noqa: E402
+from repro.core.arrivals import EnvelopeSpec  # noqa: E402
+from repro.core.fleet import run_fleet  # noqa: E402
+from repro.core.sweep import SweepAxes, sharded_sweep, sweep  # noqa: E402
+
+needs_devices = pytest.mark.skipif(
+    jax.device_count() < 2, reason="needs >=2 host devices")
+
+SCALE = 0.01
+
+
+def _env(scenario):
+    return EnvelopeSpec(demand_scale=SCALE, gpu_scenario=scenario)
+
+
+def _grid8():
+    """8 configurations: 2 designs × 2 scenarios × 2 seeds."""
+    return SweepAxes.product(
+        designs=[h.get_design("4N/3"), h.get_design("3+1")],
+        envs=[_env(proj.MED), _env(proj.HIGH)],
+        seeds=(3, 4))
+
+
+def _assert_sweeps_match(res_1, res_d):
+    """Sharded vs single-device: same inputs, same per-config program —
+    only the device decomposition differs, so tolerances are tight."""
+    assert len(res_1) == len(res_d)
+    np.testing.assert_array_equal(res_1.n_halls_built, res_d.n_halls_built)
+    np.testing.assert_allclose(res_1.final_deployed_mw,
+                               res_d.final_deployed_mw, rtol=1e-6)
+    np.testing.assert_allclose(res_1.deployed_mw, res_d.deployed_mw,
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(res_1.p50_stranding, res_d.p50_stranding,
+                               atol=1e-6)
+    np.testing.assert_allclose(res_1.p90_stranding, res_d.p90_stranding,
+                               atol=1e-6)
+    np.testing.assert_array_equal(res_1.halls_active, res_d.halls_active)
+    np.testing.assert_allclose(res_1.placed_fraction, res_d.placed_fraction,
+                               atol=1e-7)
+    np.testing.assert_allclose(res_1.final_hall_stranding,
+                               res_d.final_hall_stranding, atol=1e-6)
+    np.testing.assert_allclose(res_1.final_lineup_stranding,
+                               res_d.final_lineup_stranding, atol=1e-6)
+    np.testing.assert_allclose(res_1.effective_dpm, res_d.effective_dpm,
+                               rtol=1e-6)
+
+
+@needs_devices
+def test_sharded_matches_sweep_and_sequential():
+    """Acceptance: sharded ≡ single-device ≡ sequential on a ≥8-config
+    grid under 2 (simulated) host devices."""
+    axes = _grid8()
+    assert len(axes) >= 8
+    res_1 = sweep(axes)
+    res_d = sharded_sweep(axes)
+    _assert_sweeps_match(res_1, res_d)
+    # spot-check the sequential reference on a design/scenario/seed spread
+    for i in (0, 3, 6):
+        r = run_fleet(axes.config(i))
+        assert int(res_d.n_halls_built[i]) == r.n_halls_built
+        np.testing.assert_allclose(res_d.final_deployed_mw[i],
+                                   r.final_deployed_mw, rtol=1e-5)
+        np.testing.assert_allclose(res_d.p90_stranding[i], r.p90_stranding,
+                                   atol=2e-3)
+        np.testing.assert_allclose(res_d.placed_fraction[i],
+                                   r.placed_fraction, atol=1e-6)
+
+
+@needs_devices
+def test_sharded_remainder_grid():
+    """5 configurations on 2 devices: the batch pads to 6, the replica is
+    dropped, and every real configuration still matches."""
+    axes = SweepAxes.zip(
+        designs=[h.get_design("4N/3"), h.get_design("3+1"),
+                 h.get_design("4N/3"), h.get_design("3+1"),
+                 h.get_design("10N/8")],
+        envs=[_env(proj.MED)],
+        policies=[pl.POLICY_VAR_MIN, pl.POLICY_VAR_MIN, pl.POLICY_MIN_WASTE,
+                  pl.POLICY_VAR_MIN, pl.POLICY_VAR_MIN],
+        seeds=[0, 0, 0, 1, 0])
+    assert len(axes) % jax.device_count() != 0
+    res_1 = sweep(axes)
+    res_d = sharded_sweep(axes)
+    assert len(res_d) == 5
+    _assert_sweeps_match(res_1, res_d)
+
+
+@needs_devices
+def test_sharded_result_unpacks():
+    """SweepResult.result(i) works identically on sharded outputs."""
+    axes = SweepAxes.zip(designs=[h.get_design("4N/3"),
+                                  h.get_design("3+1")],
+                         envs=[_env(proj.MED)])
+    res = sharded_sweep(axes)
+    for i in range(len(axes)):
+        fr = res.result(i)
+        assert fr.n_halls_built == int(res.n_halls_built[i])
+        assert fr.final_hall_stranding.shape == (fr.n_halls_built,)
+
+
+def test_single_device_passthrough():
+    """On one device `sharded_sweep` must be byte-for-byte `sweep` (it is
+    a passthrough); runs regardless of the host device count."""
+    axes = SweepAxes.zip(designs=[h.get_design("4N/3")],
+                         envs=[_env(proj.MED), _env(proj.HIGH)])
+    res_s = sharded_sweep(axes, devices=jax.devices()[:1])
+    res_b = sweep(axes)
+    np.testing.assert_array_equal(res_s.final_deployed_mw,
+                                  res_b.final_deployed_mw)
+    np.testing.assert_array_equal(res_s.p90_stranding, res_b.p90_stranding)
+    np.testing.assert_array_equal(res_s.n_halls_built, res_b.n_halls_built)

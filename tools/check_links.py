@@ -1,0 +1,54 @@
+#!/usr/bin/env python
+"""Markdown link check: every relative link target in the repo's *.md
+files must exist on disk.  External http(s)/mailto links are not fetched
+(CI has no network guarantees); pure-anchor links are skipped.
+
+    python tools/check_links.py [repo_root]
+
+Exit status 0 iff no broken links.  Also importable:
+`check(root) -> list[str]` returns the broken-link report lines
+(used by tests/test_docs.py).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# [text](target) — target up to the first unescaped ')' or whitespace.
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP_DIRS = {".git", "node_modules", "__pycache__", ".venv"}
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def check(root: pathlib.Path) -> list[str]:
+    root = root.resolve()
+    errors = []
+    for md in sorted(root.rglob("*.md")):
+        if _SKIP_DIRS.intersection(md.relative_to(root).parts):
+            continue
+        for target in _LINK.findall(md.read_text(encoding="utf-8")):
+            if target.startswith(_EXTERNAL):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:                      # pure in-page anchor
+                continue
+            if not (md.parent / path).resolve().exists():
+                errors.append(
+                    f"{md.relative_to(root)}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    root = pathlib.Path(argv[1]) if len(argv) > 1 else \
+        pathlib.Path(__file__).resolve().parents[1]
+    errors = check(root)
+    for e in errors:
+        print(e)
+    n_md = len(list(root.rglob("*.md")))
+    print(f"# checked {n_md} markdown files, {len(errors)} broken link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
