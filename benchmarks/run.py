@@ -439,6 +439,29 @@ def sweep_speedup():
 
 
 @bench
+def scenario_sweep():
+    """Beyond-the-paper scenario frontier (docs/scenarios.md): baseline +
+    all four scenario families (demand shocks, correlated cohorts,
+    mix/LA sweeps, refresh waves) on ONE sharded sweep grid; emits
+    p50/p90 stranding and effective-capex deltas per scenario."""
+    base = EnvelopeSpec(demand_scale=SCALE)
+    t0 = time.time()
+    pts = payoff.scenario_frontier(hierarchy.get_design("3+1"),
+                                   base_env=base)
+    us = (time.time() - t0) / len(pts) * 1e6    # amortized per scenario
+    for p in pts:
+        emit(f"scenario.{p.family}.{p.label}", us,
+             f"p50={p.p50_stranding:.3f};p90={p.p90_stranding:.3f};"
+             f"halls={p.n_halls};dP90={p.d_p90:+.3f};"
+             f"dCapex={p.d_capex:+.3%};d$/MW={p.d_dpm:+.3%}")
+    worst = max(pts, key=lambda p: p.p90_stranding)
+    n_fam = len({p.family for p in pts}) - 1     # minus the baseline
+    emit("scenario.frontier", 0,
+         f"n_scenarios={len(pts)};n_families={n_fam};"
+         f"worst_p90={worst.family}:{worst.label}={worst.p90_stranding:.3f}")
+
+
+@bench
 def fig2_overview():
     """Design × workload overview (Fig. 2): TPS/W vs effective $/W."""
     _prefetch([_req(d, proj.HIGH) for d in ("4N/3", "8+2")])

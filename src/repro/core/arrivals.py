@@ -12,7 +12,7 @@ the placement simulators consume the resulting arrays on device.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -68,8 +68,52 @@ class Trace:
 
 @dataclass
 class EnvelopeSpec:
-    """Demand envelope (paper Table 1: 10 GW cumulative by default —
-    6.0 GPU / 2.8 compute / 1.2 storage — scalable via `demand_scale`)."""
+    """Demand envelope (paper Table 1) plus beyond-the-paper scenario knobs.
+
+    The paper baseline is 10 GW *cumulative* demand over the buildout
+    horizon — 6.0 GW accelerators / 2.8 GW general compute / 1.2 GW
+    storage — scaled uniformly by `demand_scale` (all `*_gw` fields are
+    gigawatts; everything downstream of `annual_targets_kw` is kilowatts).
+    Class ids are `resources.CLASS_GPU / CLASS_COMPUTE / CLASS_STORAGE`.
+
+    The scenario-generator fields (see `repro.core.scenarios` and
+    docs/scenarios.md) perturb the baseline; at their defaults
+    (`shock_multiplier=1.0`, `cohort_window_m=0`, `refresh_cycle_m=0`,
+    `mix_end=None`) the generated trace is bit-for-bit the paper grid's,
+    so sweeps mixing baseline and scenario envelopes stay comparable.
+
+    Paper-grid fields:
+        start_year / end_year: buildout horizon (inclusive); the
+            simulated month count is `(end_year - start_year + 1) * 12`.
+        demand_scale: uniform multiplier on cumulative demand
+            (1.0 ⇒ 10 GW; benchmarks default to a 0.04 ⇒ 400 MW miniature).
+        gpu_gw / compute_gw / storage_gw: per-class cumulative demand [GW].
+        growth: per-class annual demand growth factors (class id → rate).
+        gpu_scenario / nongpu_scenario: rack-power TDP trajectory names
+            (`projections.LOW/MED/HIGH`).
+        pod_racks: GPU placement quantum in racks (1 = rack-scale, 3–7 =
+            multi-rack pods).
+        pod_scale_arch: use Kyber pod-scale racks from 2027 onward.
+        quantum_racks: same-SKU racks per non-GPU cluster (§6.4).
+        la_fraction: probability an arrival is low-availability tier
+            (may consume failover headroom, §4.1).
+
+    Scenario fields:
+        shock_month: month index of a demand shock; -1 = no shock.
+        shock_multiplier: monthly-budget multiplier after the shock
+            (>1 surge, <1 bust; exactly 1.0 reproduces the baseline).
+        shock_ramp_months: 0 = step at `shock_month`; >0 = linear ramp
+            reaching `shock_multiplier` over that many months.
+        cohort_window_m: >0 = correlated-lifetime cohorts: all same-class
+            deployments arriving within one window share a decommission
+            epoch instead of drawing independent lifetimes.
+        refresh_cycle_m: >0 = decommission-wave refresh cycles:
+            end-of-life months snap up to the next multiple of the cycle
+            (hardware-generation turnover pulses).
+        mix_end: optional (gpu, compute, storage) power-share tuple the
+            per-year class split linearly interpolates toward by
+            `end_year` (normalized; total annual demand is preserved).
+    """
     start_year: int = 2026
     end_year: int = 2034
     demand_scale: float = 1.0          # 1.0 ⇒ 10 GW cumulative
@@ -84,14 +128,83 @@ class EnvelopeSpec:
     pod_scale_arch: bool = False        # use Kyber pods from 2027
     quantum_racks: int = 10             # same-SKU racks per cluster (§6.4)
     la_fraction: float = 0.0            # share of LA-tier arrivals
+    # --- scenario-generator knobs (repro.core.scenarios) ---
+    shock_month: int = -1               # -1 = no demand shock
+    shock_multiplier: float = 1.0       # budget multiplier after the shock
+    shock_ramp_months: int = 0          # 0 = step; >0 = linear ramp-in
+    cohort_window_m: int = 0            # 0 = independent lifetimes
+    refresh_cycle_m: int = 0            # 0 = no refresh waves
+    mix_end: Optional[Tuple[float, float, float]] = None
+
+    @property
+    def n_months(self) -> int:
+        """Simulated month count of the buildout horizon."""
+        return (self.end_year - self.start_year + 1) * 12
 
     def annual_targets_kw(self, class_id: int) -> np.ndarray:
-        total_gw = {CLASS_GPU: self.gpu_gw, CLASS_COMPUTE: self.compute_gw,
-                    CLASS_STORAGE: self.storage_gw}[class_id]
-        total_kw = total_gw * 1e6 * self.demand_scale
+        """Per-year arrival power targets [kW] for one hardware class.
+
+        Baseline: the class's cumulative demand spread over the horizon
+        with its compound `growth` weighting.  With `mix_end` set, the
+        *combined* annual total is preserved and the per-year class split
+        interpolates linearly from the baseline split at `start_year` to
+        the normalized `mix_end` shares at `end_year`.
+        """
         years = np.arange(self.start_year, self.end_year + 1)
-        w = self.growth[class_id] ** np.arange(len(years))
-        return total_kw * w / w.sum()
+
+        def base(cid):
+            total_gw = {CLASS_GPU: self.gpu_gw,
+                        CLASS_COMPUTE: self.compute_gw,
+                        CLASS_STORAGE: self.storage_gw}[cid]
+            w = self.growth[cid] ** np.arange(len(years))
+            return total_gw * 1e6 * self.demand_scale * w / w.sum()
+
+        if self.mix_end is None:
+            return base(class_id)
+        per_class = {c: base(c)
+                     for c in (CLASS_GPU, CLASS_COMPUTE, CLASS_STORAGE)}
+        tot = sum(per_class.values())                     # [Y] combined
+        end = np.asarray(self.mix_end, float)
+        end = end / end.sum()
+        # 0 at start_year, 1 at end_year; a one-year horizon IS end_year
+        f = np.linspace(0.0, 1.0, len(years)) if len(years) > 1 \
+            else np.ones(1)
+        share = ((1.0 - f) * per_class[class_id] / np.maximum(tot, 1e-12)
+                 + f * end[class_id])
+        return tot * share
+
+    def monthly_multipliers(self) -> np.ndarray:
+        """[n_months] demand-shock multiplier on the monthly budgets.
+
+        All-ones without a shock (`shock_month < 0`); a step to
+        `shock_multiplier` at `shock_month`, or a linear ramp over
+        `shock_ramp_months` months reaching it.  A multiplier of exactly
+        1.0 leaves every budget bit-identical to the baseline.
+        """
+        t = np.arange(self.n_months, dtype=float)
+        if self.shock_month < 0:
+            return np.ones_like(t)
+        if self.shock_ramp_months > 0:
+            frac = np.clip((t - self.shock_month) / self.shock_ramp_months,
+                           0.0, 1.0)
+        else:
+            frac = (t >= self.shock_month).astype(float)
+        return 1.0 + frac * (self.shock_multiplier - 1.0)
+
+    def demand_multiplier(self) -> float:
+        """Budget-weighted mean of `monthly_multipliers` — the factor by
+        which a demand shock scales *cumulative* demand (1.0 without a
+        shock).  Used by hall auto-sizing (`fleet._auto_halls`) so surge
+        scenarios still get enough hall headroom."""
+        if self.shock_month < 0:
+            return 1.0
+        mult = self.monthly_multipliers()
+        num = den = 0.0
+        for cid in (CLASS_GPU, CLASS_COMPUTE, CLASS_STORAGE):
+            w = np.outer(self.annual_targets_kw(cid), SEASONALITY).ravel()
+            num += float(w @ mult)
+            den += float(w.sum())
+        return num / max(den, 1e-12)
 
 
 def _rack_kw_for(env: EnvelopeSpec, class_id: int, year: int,
@@ -108,10 +221,68 @@ def _rack_kw_for(env: EnvelopeSpec, class_id: int, year: int,
     return float(pmax * rng.choice(alphas, p=probs))     # Eq. 3
 
 
+def _correlate_cohorts(t: Trace, window_m: int, seed: int) -> Trace:
+    """Correlated-lifetime cohorts (`EnvelopeSpec.cohort_window_m`).
+
+    Replaces the per-deployment N(μ,σ) lifetimes with a shared
+    per-(class, window) decommission epoch: one lifetime is drawn per
+    cohort (seeded by `(seed, class, cohort)`, so traces stay
+    reproducible) relative to the window start, and every member's
+    `lifetime_m` is set so `month + lifetime_m` lands on that epoch.
+    The epoch is floored at the window *end*, so even windows wider
+    than the lifetime draw keep the whole cohort on one shared epoch
+    (late-window arrivals just live at least one month).
+    """
+    cohort = t.month // window_m
+    life = np.asarray(t.lifetime_m).copy()
+    for cid in np.unique(t.class_id):
+        mu, sd = LIFETIME[int(cid)]
+        in_class = t.class_id == cid
+        for c in np.unique(cohort[in_class]):
+            crng = np.random.default_rng([seed, int(cid), int(c), 0xC0C0])
+            epoch = int(c) * window_m + max(
+                window_m, 12, int(round(crng.normal(mu, sd) * 12)))
+            sel = in_class & (cohort == c)
+            life[sel] = np.maximum(1, epoch - t.month[sel])
+    t.lifetime_m = life.astype(np.int32)
+    return t
+
+
+def _snap_refresh_waves(t: Trace, cycle_m: int) -> Trace:
+    """Decommission-wave refresh cycles (`EnvelopeSpec.refresh_cycle_m`):
+    every end-of-life month snaps *up* to the next multiple of the cycle,
+    turning the smooth decommission stream into generation-turnover
+    pulses (deployment months are untouched)."""
+    decom = t.month + t.lifetime_m
+    wave = -(-decom // cycle_m) * cycle_m          # ceil to next wave epoch
+    t.lifetime_m = np.maximum(1, wave - t.month).astype(np.int32)
+    return t
+
+
 def generate_fleet_trace(env: EnvelopeSpec, seed: int = 0) -> Trace:
-    """Multi-year deployment trace over the buildout horizon (§5.1)."""
+    """Multi-year deployment trace over the buildout horizon (§5.1).
+
+    Spreads each class's annual targets (`env.annual_targets_kw`, kW)
+    into monthly budgets with procurement seasonality and the envelope's
+    demand-shock multipliers, then emits whole deployment events (GPU
+    pods of `pod_racks`, non-GPU clusters of `quantum_racks`) until each
+    budget is spent, carrying over-spend debt into the next month.
+    Per-event rack power comes from the TDP projections (GPU) or the
+    empirical SKU clusters (Eq. 3); lifetimes are N(μ,σ) draws
+    (`LIFETIME`, months) unless the envelope's cohort/refresh knobs
+    post-process them (see `_correlate_cohorts` / `_snap_refresh_waves`).
+
+    All powers are kilowatts (`Trace.rack_kw` is per-rack kW; an event's
+    power is `rack_kw * n_racks`).  `seed` fully determines the trace:
+    the same `(env, seed)` pair is bit-for-bit reproducible, and
+    scenario knobs at their neutral defaults (multiplier 1.0, window 0,
+    cycle 0, `mix_end=None`) leave the draw sequence — hence the trace —
+    identical to the paper baseline.  Returns the events sorted by
+    arrival month (stable).
+    """
     rng = np.random.default_rng(seed)
     years = np.arange(env.start_year, env.end_year + 1)
+    mult = env.monthly_multipliers()
     recs = {f: [] for f in Trace.__dataclass_fields__}
 
     def emit(month, class_id, rack_kw, n_racks, is_pod, year):
@@ -134,7 +305,7 @@ def generate_fleet_trace(env: EnvelopeSpec, seed: int = 0) -> Trace:
         for yi, year in enumerate(years):
             for mo in range(12):
                 month = yi * 12 + mo
-                budget = targets[yi] * SEASONALITY[mo] + carry
+                budget = targets[yi] * SEASONALITY[mo] * mult[month] + carry
                 spent = 0.0
                 while spent < budget:
                     kw = _rack_kw_for(env, class_id, year, rng)
@@ -156,6 +327,10 @@ def generate_fleet_trace(env: EnvelopeSpec, seed: int = 0) -> Trace:
     t.tier = t.tier.astype(np.int32)
     t.lifetime_m = t.lifetime_m.astype(np.int32)
     t.harvest_frac = t.harvest_frac.astype(np.float32)
+    if env.cohort_window_m > 0:
+        t = _correlate_cohorts(t, env.cohort_window_m, seed)
+    if env.refresh_cycle_m > 0:
+        t = _snap_refresh_waves(t, env.refresh_cycle_m)
     return t.sorted_by_month()
 
 
@@ -166,8 +341,20 @@ def sample_mixed_trace(n_events: int, year: int = 2028,
                        la_fraction: float = 0.0) -> Trace:
     """Steady-state mixed-SKU stream for single-hall Monte Carlo (§4.4).
 
-    Event class probabilities are derived from the target *power* shares
-    (GPU/compute/storage ≈ gpu_share/0.7·rest/0.3·rest of added power).
+    Unlike `generate_fleet_trace` there is no buildout calendar: all
+    `n_events` arrive at month 0 (the saturation simulator places them
+    until the hall fills).  Event *class* probabilities are derived from
+    the target power shares — GPU gets `gpu_power_share` of added power,
+    the remainder splits 0.7/0.3 between general compute and storage —
+    by dividing each share by the class's empirical mean event power
+    (64 calibration draws per class), so the realized power mix matches
+    the requested split.  `rack_kw` is per-rack kilowatts; an event's
+    power is `rack_kw * n_racks` with `n_racks = pod_racks` for GPU pods
+    (1 if rack-scale) and `quantum_racks` otherwise.  `seed` drives one
+    `np.random.default_rng` stream through calibration and sampling, so
+    equal `(n_events, year, scenario, seed, …)` calls are bit-for-bit
+    reproducible; class ids are `resources.CLASS_*`, tiers
+    `resources.TIER_HA/TIER_LA` (LA with probability `la_fraction`).
     """
     rng = np.random.default_rng(seed)
     env = EnvelopeSpec(gpu_scenario=scenario, nongpu_scenario=scenario,

@@ -71,7 +71,10 @@ class FleetResult:
 
 
 def _auto_halls(design: DesignSpec, env: EnvelopeSpec) -> int:
-    total_mw = (env.gpu_gw + env.compute_gw + env.storage_gw) * 1e3 * env.demand_scale
+    # demand_multiplier() rescales cumulative demand under shock scenarios
+    # (surge envelopes need more hall headroom; 1.0 for the paper grid)
+    total_mw = (env.gpu_gw + env.compute_gw + env.storage_gw) * 1e3 \
+        * env.demand_scale * env.demand_multiplier()
     # decommissioning returns capacity; 45% slack covers stranding + churn
     return int(np.ceil(total_mw / (design.ha_capacity_kw / 1e3) * 1.45)) + 4
 
@@ -228,6 +231,11 @@ def simulate_lifecycle(jt: JaxTopology, ft: FleetTrace, idx, valid, policy,
             n_try = jnp.minimum(n_act + 1, h_cap)
 
             if with_pods:
+                # perf: under vmap this lax.cond evaluates BOTH branches
+                # (first attempt AND the open-a-hall retry) for every
+                # batched configuration; a split-trace (pods vs clusters)
+                # scan would cut pod sweeps ~2x — see ROADMAP.md
+                # "Pod-path cost under vmap".
                 def attempt(n):
                     return pl.place(jt, st, dep, policy, k, jt.row_hall < n)
 
@@ -363,7 +371,7 @@ def run_fleet(cfg: FleetConfig, trace: Trace | None = None) -> FleetResult:
     design, env = cfg.design, cfg.env
     if trace is None:
         trace = generate_fleet_trace(env, cfg.seed)
-    months = (env.end_year - env.start_year + 1) * 12
+    months = env.n_months
     H = cfg.n_halls_max or _auto_halls(design, env)
     topo = build_topology(design, H)
     jt = pl.jax_topology(topo)

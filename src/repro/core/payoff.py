@@ -1,21 +1,28 @@
-"""Pod payoff analysis (paper §6.5, Figs. 17–18).
+"""Pod payoff analysis (paper §6.5, Figs. 17–18) and the beyond-the-paper
+scenario frontier.
 
 Pod Payoff = (1 + ΔTPS/W) / (1 + ΔCost) − 1   relative to a single-rack
 baseline, where ΔTPS/W is the serving-side gain from pod-local EP
 communication and ΔCost is the lifecycle deployability penalty of the
 coarser placement quantum (from fleet simulation).
+
+`scenario_frontier` stresses one design across every scenario family in
+`repro.core.scenarios` (demand shocks, correlated cohorts, mix/LA
+sweeps, refresh waves) on ONE sweep grid and reports p50/p90 stranding
+and effective-capex deltas against the paper baseline simulated in the
+same compiled call (docs/scenarios.md).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Dict, Sequence
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
-from . import fleet, projections as proj, throughput as tp
+from . import fleet, projections as proj, scenarios as sc, throughput as tp
 from .arrivals import EnvelopeSpec
 from .hierarchy import DesignSpec
-from .sweep import SweepAxes, sharded_sweep
+from .sweep import SweepAxes, sharded_sweep, sweep
 
 
 @dataclass
@@ -80,4 +87,71 @@ def pod_payoff_study(design: DesignSpec, models: Sequence[tp.MoEModel],
             points.append(PayoffPoint(
                 design.name, m.name, n, tw, d_tps, r.effective_dpm, d_cost,
                 payoff, fleet_tpw))
+    return points
+
+
+@dataclass
+class ScenarioPoint:
+    """One (scenario, seed) row of the frontier study.
+
+    Deltas are against the paper-baseline configuration with the same
+    design and seed from the SAME sweep call (`d_* == 0` for the
+    baseline rows themselves).
+    """
+    family: str             # "baseline" or a scenarios.FAMILIES name
+    label: str              # perturbation label within the family
+    seed: int
+    p50_stranding: float    # final-month p50 over mature halls
+    p90_stranding: float    # final-month p90 (the paper's tail metric)
+    n_halls: int
+    deployed_mw: float
+    effective_dpm: float    # lifecycle-effective $/MW
+    total_capex: float      # $
+    d_p90: float            # p90 stranding delta vs baseline (absolute)
+    d_capex: float          # fractional total-capex delta vs baseline
+    d_dpm: float            # fractional effective-$/MW delta vs baseline
+
+
+def scenario_frontier(design: DesignSpec,
+                      base_env: Optional[EnvelopeSpec] = None,
+                      seeds: Sequence[int] = (0,),
+                      families: Optional[Dict[str, sc.ScenarioBatch]] = None,
+                      sharded: bool = True) -> list[ScenarioPoint]:
+    """Beyond-the-paper scenario study (docs/scenarios.md).
+
+    Evaluates `design` on the paper baseline plus every scenario family
+    (defaults: `scenarios.all_families(base_env)`) as ONE batched sweep
+    call — device-sharded when `sharded` and more than one device is
+    visible — and returns one `ScenarioPoint` per (scenario, seed) with
+    stranding and effective-capex deltas against the same-seed baseline.
+
+        pts = scenario_frontier(hierarchy.get_design("3+1"),
+                                EnvelopeSpec(demand_scale=0.01))
+        max(pts, key=lambda p: p.p90_stranding)     # worst-case envelope
+    """
+    base_env = base_env if base_env is not None else \
+        EnvelopeSpec(demand_scale=0.01)
+    axes = sc.frontier_axes([design], base=base_env, seeds=seeds,
+                            families=families)
+    res = (sharded_sweep if sharded else sweep)(axes)
+
+    base_idx = {axes.seeds[i]: i for i in range(len(axes))
+                if axes.tags[i] == sc.BASELINE_TAG}
+    points = []
+    for i in range(len(axes)):
+        fam, label = axes.tags[i].split(":", 1)
+        j = base_idx[axes.seeds[i]]
+        points.append(ScenarioPoint(
+            family=fam, label=label, seed=axes.seeds[i],
+            p50_stranding=float(res.p50_stranding[i, -1]),
+            p90_stranding=float(res.p90_stranding[i, -1]),
+            n_halls=int(res.n_halls_built[i]),
+            deployed_mw=float(res.final_deployed_mw[i]),
+            effective_dpm=float(res.effective_dpm[i]),
+            total_capex=float(res.total_capex[i]),
+            d_p90=float(res.p90_stranding[i, -1] - res.p90_stranding[j, -1]),
+            d_capex=float(res.total_capex[i] / max(res.total_capex[j], 1.0)
+                          - 1.0),
+            d_dpm=float(res.effective_dpm[i] / max(res.effective_dpm[j],
+                                                   1e-9) - 1.0)))
     return points

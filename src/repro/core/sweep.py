@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import functools
 import itertools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from types import SimpleNamespace
 from typing import List, Sequence
 
@@ -78,39 +78,55 @@ class SweepAxes:
     `config(i)` recovers the i-th configuration as a sequential
     `fleet.FleetConfig`, which is how the equivalence tests compare a
     sweep against `fleet.run_fleet`.
+
+    `tags` is an optional aligned list of free-form per-configuration
+    labels (scenario generators use `"family:label"` — see
+    `repro.core.scenarios`); it broadcasts like the other axes and rides
+    along purely for reporting (`SweepResult.tags`).
     """
     designs: List[DesignSpec]
     envs: List[EnvelopeSpec]
     policies: List[int]
     seeds: List[int]
+    tags: List[str] = field(default_factory=lambda: [""])
 
     def __len__(self):
         return len(self.designs)
 
     def __post_init__(self):
         B = max(len(self.designs), len(self.envs), len(self.policies),
-                len(self.seeds))
+                len(self.seeds), len(self.tags))
         self.designs = _broadcast(self.designs, B, "designs")
         self.envs = _broadcast(self.envs, B, "envs")
         self.policies = [int(p) for p in _broadcast(self.policies, B,
                                                     "policies")]
         self.seeds = [int(s) for s in _broadcast(self.seeds, B, "seeds")]
+        self.tags = [str(t) for t in _broadcast(self.tags, B, "tags")]
 
     @staticmethod
-    def zip(designs, envs, policies=(DEFAULT_POLICY,), seeds=(0,)
-            ) -> "SweepAxes":
+    def zip(designs, envs, policies=(DEFAULT_POLICY,), seeds=(0,),
+            tags=("",)) -> "SweepAxes":
         """Aligned per-configuration sequences (length-1 broadcasts)."""
         return SweepAxes(list(designs), list(envs), list(policies),
-                         list(seeds))
+                         list(seeds), list(tags))
 
     @staticmethod
     def product(designs: Sequence[DesignSpec], envs: Sequence[EnvelopeSpec],
                 policies: Sequence[int] = (DEFAULT_POLICY,),
-                seeds: Sequence[int] = (0,)) -> "SweepAxes":
-        """Full grid, designs-major ordering."""
-        combos = list(itertools.product(designs, envs, policies, seeds))
-        return SweepAxes([c[0] for c in combos], [c[1] for c in combos],
-                         [c[2] for c in combos], [c[3] for c in combos])
+                seeds: Sequence[int] = (0,),
+                env_tags: Sequence[str] | None = None) -> "SweepAxes":
+        """Full grid, designs-major ordering.  `env_tags` (aligned with
+        `envs`) labels each envelope; the tag follows its envelope
+        through the cross product."""
+        env_tags = list(env_tags) if env_tags is not None else [""] * len(envs)
+        if len(env_tags) != len(envs):
+            raise ValueError(f"env_tags has length {len(env_tags)}, "
+                             f"expected {len(envs)}")
+        combos = list(itertools.product(designs, zip(envs, env_tags),
+                                        policies, seeds))
+        return SweepAxes([c[0] for c in combos], [c[1][0] for c in combos],
+                         [c[2] for c in combos], [c[3] for c in combos],
+                         [c[1][1] for c in combos])
 
     def config(self, i: int, harvest: bool = True,
                mature_months: int = 12) -> FleetConfig:
@@ -142,6 +158,11 @@ class SweepResult:
 
     def __len__(self):
         return len(self.axes)
+
+    @property
+    def tags(self) -> List[str]:
+        """Per-configuration labels (see `SweepAxes.tags`)."""
+        return self.axes.tags
 
     def result(self, i: int) -> FleetResult:
         """Unpack configuration `i` into a sequential-style FleetResult."""
@@ -217,7 +238,7 @@ def _prepare(axes: SweepAxes, n_halls_max: int,
     horizons = {(e.start_year, e.end_year) for e in axes.envs}
     if len(horizons) != 1:
         raise ValueError(f"envelopes span different horizons: {horizons}")
-    months = (axes.envs[0].end_year - axes.envs[0].start_year + 1) * 12
+    months = axes.envs[0].n_months
 
     if traces is None:
         traces = [generate_fleet_trace(e, s)

@@ -10,8 +10,8 @@ REPO = pathlib.Path(__file__).resolve().parents[1]
 
 
 def test_front_door_exists():
-    for rel in ("README.md", "docs/architecture.md", "benchmarks/README.md",
-                "ROADMAP.md"):
+    for rel in ("README.md", "docs/architecture.md", "docs/scenarios.md",
+                "benchmarks/README.md", "ROADMAP.md"):
         assert (REPO / rel).is_file(), f"missing {rel}"
 
 
@@ -42,6 +42,36 @@ def test_quickstart_commands_reference_real_files():
         assert (REPO / rel).is_file(), f"README references missing {rel}"
     assert "PYTHONPATH=src python -m pytest -x -q" in readme, \
         "README must quote the tier-1 verify command"
+
+
+def test_scenario_catalog_commands_run_as_written():
+    """Every command docs/scenarios.md quotes must reference real files,
+    real generator families, and a registered benchmark (CI runs the
+    commands themselves in the scenario-study smoke step)."""
+    doc = (REPO / "docs" / "scenarios.md").read_text()
+    for rel in re.findall(r"(?:examples|benchmarks|tools)/[\w./]+\.py", doc):
+        assert (REPO / rel).is_file(), f"scenarios.md references missing {rel}"
+
+    from repro.core import scenarios
+    families = re.findall(r"--family (\w+)", doc)
+    assert set(families) == set(scenarios.FAMILIES), \
+        "catalog must document a run command per family"
+    # the generators the catalog names must exist with those knobs
+    for fn, knob in (("demand_shocks", "multipliers"),
+                     ("correlated_cohorts", "windows_m"),
+                     ("mix_sweeps", "gpu_share_end"),
+                     ("refresh_waves", "cycles_m")):
+        assert f"scenarios.{fn}" in doc
+        gen = getattr(scenarios, fn)
+        assert knob in gen.__kwdefaults__, (fn, knob)
+
+    assert "--only scenario_sweep" in doc
+    sys.path.insert(0, str(REPO))
+    try:
+        from benchmarks import run as bench_run
+    finally:
+        sys.path.pop(0)
+    assert "scenario_sweep" in bench_run.REGISTRY
 
 
 def test_architecture_module_references_exist():
