@@ -8,6 +8,7 @@ claims are checkable from the output.
     PYTHONPATH=src python -m benchmarks.run                 # all, reduced scale
     PYTHONPATH=src python -m benchmarks.run --only fig13
     PYTHONPATH=src python -m benchmarks.run --scale 1.0     # full 10 GW study
+    PYTHONPATH=src python -m benchmarks.run --json BENCH.json  # + JSON rows
 
 The 10 GW headline study (--scale 1.0) takes hours on this 1-core
 container; the default 0.04 (400 MW) preserves every qualitative ranking
@@ -16,13 +17,16 @@ container; the default 0.04 (400 MW) preserves every qualitative ranking
 Fleet lifecycles are served from `_FLEET_CACHE`, which the fig
 benchmarks fill in batches via the sweep engine (`repro.core.sweep`):
 each fig prefetches its whole configuration grid as one vmapped call,
-sharded across all visible devices (`sharded_sweep`).  See
-benchmarks/README.md for the CSV schema and the sharded `sweep_speedup`
-mode.
+sharded across all visible devices (`sharded_sweep`).  The single-hall
+figs (5–7) run the same way through `repro.core.mc_sweep` — one batched
+call per figure grid.  See benchmarks/README.md for the CSV schema, the
+`--json` perf-trajectory dump, and the `sweep_speedup` / `mc_speedup` /
+`pod_sweep_speedup` acceptance modes.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import subprocess
 import sys
@@ -35,12 +39,14 @@ import numpy as np
 from repro.core import (arrivals, cost, fleet, hierarchy, payoff,
                         placement, projections as proj, singlehall,
                         throughput as tp)
-from repro.core.arrivals import EnvelopeSpec
+from repro.core.arrivals import EnvelopeSpec, generate_fleet_trace
 from repro.core.fleet import FleetConfig, run_fleet
+from repro.core.mc_sweep import MCAxes, sharded_mc_sweep
 from repro.core.sweep import SweepAxes, sharded_sweep, sweep
 
 REGISTRY = {}
 _FLEET_CACHE: Dict[tuple, fleet.FleetResult] = {}
+_ROWS: Dict[str, dict] = {}
 SCALE = 0.04
 
 
@@ -51,6 +57,8 @@ def bench(fn):
 
 def emit(name, us, derived):
     print(f"{name},{us:.1f},{derived}", flush=True)
+    _ROWS[name] = {"us_per_call": float(f"{us:.1f}"),
+                   "derived": str(derived)}
 
 
 def _req(design_name, scenario=proj.MED, pod_racks=1, quantum=10,
@@ -111,18 +119,21 @@ def _fleet(design_name, scenario=proj.MED, pod_racks=1, quantum=10,
 
 @bench
 def fig5_stranding_cdf():
-    """CDF of UPS stranding: single-hall MC vs fleet lifecycle (Fig. 5)."""
-    for dname in ("4N/3", "3+1"):
-        t0 = time.time()
-        mc = singlehall.monte_carlo(hierarchy.get_design(dname), n_trials=16,
-                                    n_events=500, year=2030,
-                                    scenario=proj.HIGH, seed=5)
-        us = (time.time() - t0) / 16 * 1e6
-        s = mc["lineup_stranding"].flatten()
+    """CDF of UPS stranding: single-hall MC vs fleet lifecycle (Fig. 5).
+    Both designs' MC trials run as ONE batched `mc_sweep` call."""
+    dnames = ("4N/3", "3+1")
+    t0 = time.time()
+    mc = sharded_mc_sweep(
+        MCAxes.zip(designs=[hierarchy.get_design(d) for d in dnames],
+                   seeds=[5]),
+        n_trials=16, n_events=500, year=2030, scenario=proj.HIGH)
+    us = (time.time() - t0) / (len(dnames) * 16) * 1e6   # per trial
+    for i, dname in enumerate(dnames):
+        s = mc.result(i)["lineup_stranding"].flatten()
         emit(f"fig5.mc.{dname}", us,
              f"p50={np.percentile(s, 50):.3f};p99={np.percentile(s, 99):.3f}")
-    _prefetch([_req(d, proj.HIGH) for d in ("4N/3", "3+1")])
-    for dname in ("4N/3", "3+1"):
+    _prefetch([_req(d, proj.HIGH) for d in dnames])
+    for dname in dnames:
         r = _fleet(dname, proj.HIGH)
         s = r.final_lineup_stranding
         emit(f"fig5.lifecycle.{dname}", r._wall * 1e6,
@@ -130,22 +141,29 @@ def fig5_stranding_cdf():
              f"halls={r.n_halls_built}")
 
 
+def _fig6_axes(seed=6):
+    """The Fig. 6 grid: 21-point SKU-kW sweep × 2 designs, designs-major."""
+    kws = np.arange(200, 2501, 115)
+    designs = [hierarchy.get_design(d) for d in ("4N/3", "3+1")]
+    return kws, MCAxes.product(designs=designs,
+                               sku_kw=[float(k) for k in kws], seeds=(seed,))
+
+
 @bench
 def fig6_single_sku_sweep():
-    """Single-hall single-SKU stranding vs deployment power (Fig. 6)."""
-    kws = np.arange(200, 2501, 115)
-    for dname in ("4N/3", "3+1"):
-        d = hierarchy.get_design(dname)
+    """Single-hall single-SKU stranding vs deployment power (Fig. 6).
+    The whole per-kW loop — 21 kW points × 2 designs — is ONE batched
+    `mc_sweep` call over the grid."""
+    kws, axes = _fig6_axes()
+    t0 = time.time()
+    res = sharded_mc_sweep(axes, n_trials=4, n_events=300, harvest=False,
+                           single_sku_gpu=True)
+    us = (time.time() - t0) / len(axes) * 1e6   # amortized per grid point
+    for di, dname in enumerate(("4N/3", "3+1")):
         vals = []
-        t0 = time.time()
-        for kw in kws:
-            mc = singlehall.monte_carlo(d, n_trials=4, n_events=300,
-                                        sku_kw_override=float(kw),
-                                        single_sku_gpu=True, harvest=False,
-                                        seed=6)
-            dep = mc["deployed_kw"].mean()
-            vals.append(1.0 - dep / mc["ha_capacity_kw"])
-        us = (time.time() - t0) / len(kws) * 1e6
+        for ki in range(len(kws)):
+            r = res.result(di * len(kws) + ki)
+            vals.append(1.0 - r["deployed_kw"].mean() / r["ha_capacity_kw"])
         tops = ",".join(f"{k}:{v:.2f}" for k, v in
                         zip(kws.tolist(), vals) if v > 0.15)
         emit(f"fig6.{dname}", us, f"max_strand={max(vals):.3f};spikes>{{0.15}}=[{tops}]")
@@ -153,17 +171,19 @@ def fig6_single_sku_sweep():
 
 @bench
 def fig7_placement_policies():
-    """Placement-policy comparison (Fig. 7): variance-min lowest."""
+    """Placement-policy comparison (Fig. 7): variance-min lowest.
+    All 4 policies × 2 designs run as ONE batched `mc_sweep` call."""
+    dnames = ("10N/8", "8+2")
+    t0 = time.time()
+    res = sharded_mc_sweep(
+        MCAxes.product(designs=[hierarchy.get_design(d) for d in dnames],
+                       policies=range(4), seeds=(7,)),
+        n_trials=8, n_events=900)
+    us = (time.time() - t0) / (len(res) * 8) * 1e6   # per trial
     results = {}
     for pol in range(4):
-        t0 = time.time()
-        agg = []
-        for dname in ("10N/8", "8+2"):
-            mc = singlehall.monte_carlo(hierarchy.get_design(dname),
-                                        n_trials=8, n_events=900,
-                                        policy=pol, seed=7)
-            agg.append(mc["lineup_stranding"].mean())
-        us = (time.time() - t0) / 16 * 1e6
+        agg = [res.result(di * 4 + pol)["lineup_stranding"].mean()
+               for di in range(len(dnames))]
         results[placement.POLICY_NAMES[pol]] = float(np.mean(agg))
         emit(f"fig7.{placement.POLICY_NAMES[pol]}", us,
              f"mean_lineup_stranding={np.mean(agg):.4f}")
@@ -438,6 +458,164 @@ def sweep_speedup():
                  f"error=probe_subprocess_rc{r.returncode}")
 
 
+_LEGACY_MC_JIT = None
+
+
+def _legacy_monte_carlo_fig6(design, n_trials, n_events, seed, sku_kw):
+    """Pre-refactor `singlehall.monte_carlo` reference, kept verbatim as
+    the sequential baseline `mc_speedup` measures against: per-trial
+    host-side Python-loop trace synthesis (`sample_mixed_trace`) with
+    post-hoc single-SKU in-place mutation, then one per-point jitted
+    trial batch.  Returns the mean deployed kW."""
+    global _LEGACY_MC_JIT
+    import functools
+    import jax
+    import jax.numpy as jnp
+    from repro.core import placement as pl
+    from repro.core.singlehall import TraceArrays, run_trial
+
+    if _LEGACY_MC_JIT is None:
+        @functools.partial(jax.jit, static_argnames=("policy", "harvest"))
+        def _run(jt, init, ta, tb, keys, policy, harvest):
+            return jax.vmap(lambda a, b, k: run_trial(
+                jt, init, a, b, policy, k, harvest))(ta, tb, keys)
+        _LEGACY_MC_JIT = _run
+
+    topo = hierarchy.build_topology(design)
+    jt = pl.jax_topology(topo)
+    init = pl.init_state(topo)
+    tas, tbs = [], []
+    for i in range(n_trials):
+        t = arrivals.sample_mixed_trace(n_events, 2028, proj.MED,
+                                        seed + 7919 * i, 1.0, 1, 10)
+        t.rack_kw[:] = sku_kw
+        t.class_id[:] = 0
+        t.is_gpu[:] = True
+        tas.append(t)
+        tb = arrivals.sample_mixed_trace(max(200, n_events // 3), 2028,
+                                         proj.MED, seed + 7919 * i + 1,
+                                         1.0, 1, 10)
+        tb.rack_kw[:] = sku_kw
+        tb.is_gpu[:] = True
+        tbs.append(tb)
+    stack = lambda ts: jax.tree.map(lambda *xs: jnp.stack(xs),
+                                    *[TraceArrays.from_trace(t) for t in ts])
+    ta, tb = stack(tas), stack(tbs)
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_trials)
+    state, _, _ = _LEGACY_MC_JIT(jt, init, ta, tb, keys,
+                                 placement.DEFAULT_POLICY, False)
+    return float(jax.vmap(pl.deployed_kw)(state).mean())
+
+
+@bench
+def mc_speedup():
+    """Acceptance (ISSUE 4): the Fig. 6 grid (21 SKU-kW points × 2
+    designs) evaluated as ONE batched `mc_sweep` call vs the pre-refactor
+    sequential path (one `monte_carlo`-style call per grid point, each
+    synthesizing its trial traces in a host-side Python loop —
+    `_legacy_monte_carlo_fig6`).  A warm-up grid with a different seed
+    runs first so both legs are measured compiled; the batched outputs
+    are additionally cross-checked against the new per-point
+    `monte_carlo` wrapper (identical generator → deviation must be 0)."""
+    from repro.core.mc_sweep import mc_sweep
+
+    kw = dict(n_trials=4, n_events=300, harvest=False, single_sku_gpu=True)
+    _, warm_axes = _fig6_axes(seed=60)
+    mc_sweep(warm_axes, **kw)
+    for d in (warm_axes.designs[0], warm_axes.designs[-1]):
+        _legacy_monte_carlo_fig6(d, 4, 300, 60, 200.0)
+
+    kws, axes = _fig6_axes(seed=61)
+    t0 = time.time()
+    res = mc_sweep(axes, **kw)
+    t_batched = time.time() - t0
+    t0 = time.time()
+    seq = [_legacy_monte_carlo_fig6(axes.designs[i], 4, 300, 61,
+                                    axes.sku_kw[i])
+           for i in range(len(axes))]
+    t_seq = time.time() - t0
+
+    # exactness vs the new wrapper on sampled grid points (same batched
+    # generator, so the deviation must be 0), and the statistical gap of
+    # the legacy RNG's derived stranding (info only)
+    wrap_dev = 0.0
+    for i in (0, len(kws) - 1, len(kws), len(axes) - 1):
+        w = singlehall.monte_carlo(axes.designs[i], n_trials=4,
+                                   n_events=300,
+                                   sku_kw_override=axes.sku_kw[i],
+                                   single_sku_gpu=True, harvest=False,
+                                   seed=axes.seeds[i])
+        wrap_dev = max(wrap_dev,
+                       float(np.abs(res.result(i)["deployed_kw"]
+                                    - w["deployed_kw"]).max()))
+    strand = lambda dep, i: 1.0 - dep / float(res.ha_capacity_kw[i])
+    stat_gap = float(np.mean([abs(strand(res.deployed_kw[i].mean(), i)
+                                  - strand(seq[i], i))
+                              for i in range(len(axes))]))
+    emit("mc.batched", t_batched / len(axes) * 1e6,
+         f"n_cfg={len(axes)};n_trials=4;wall_s={t_batched:.2f}")
+    emit("mc.sequential", t_seq / len(axes) * 1e6,
+         f"wall_s={t_seq:.2f};reference=pre-refactor_python-loop_gen")
+    emit("mc.speedup", 0,
+         f"seq_over_batched={t_seq / t_batched:.2f}x;"
+         f"wrapper_dev={wrap_dev:.2e};legacy_stat_gap={stat_gap:.3f}")
+
+
+@bench
+def pod_sweep_speedup():
+    """Acceptance (ISSUE 4): batched pod-grid sweeps through the
+    split-trace scan (pods and clusters in separate per-month windows)
+    vs the pre-refactor `lax.cond(is_pod, …)` + retry path
+    (`legacy_pod_cond=True`), on a fresh 8-configuration
+    (design × pod size × seed) grid with shared traces.  The two paths
+    are exactly equivalent, so max deviation must be 0."""
+    scale = min(SCALE, 0.01)
+
+    def grid(seeds):
+        combos = [(d, p, sd) for d in ("10N/8", "8+2") for p in (3, 5)
+                  for sd in seeds]
+        return SweepAxes.zip(
+            designs=[hierarchy.get_design(d) for d, _, _ in combos],
+            envs=[EnvelopeSpec(demand_scale=scale, gpu_scenario=proj.HIGH,
+                               pod_racks=p, pod_scale_arch=True)
+                  for _, p, _ in combos],
+            seeds=[sd for *_, sd in combos])
+
+    warm = grid((301,))
+    warm_traces = [generate_fleet_trace(e, s)
+                   for e, s in zip(warm.envs, warm.seeds)]
+    sweep(warm, traces=warm_traces)
+    sweep(warm, traces=warm_traces, legacy_pod_cond=True)
+
+    axes = grid((302, 303))
+    traces = [generate_fleet_trace(e, s)
+              for e, s in zip(axes.envs, axes.seeds)]
+
+    def timed(**kw):
+        t0 = time.time()
+        res = sweep(axes, traces=traces, **kw)
+        return res, time.time() - t0
+
+    # two interleaved repetitions, min per leg (1-core wall times are
+    # noisy; the compiled executables are cached so reps only re-execute)
+    res_split, t_split = timed()
+    res_legacy, t_legacy = timed(legacy_pod_cond=True)
+    t_split = min(t_split, timed()[1])
+    t_legacy = min(t_legacy, timed(legacy_pod_cond=True)[1])
+
+    dev = float(np.max(np.abs(res_split.final_deployed_mw
+                              - res_legacy.final_deployed_mw)))
+    halls_ok = bool(np.array_equal(res_split.n_halls_built,
+                                   res_legacy.n_halls_built))
+    emit("pod_sweep.split", t_split / len(axes) * 1e6,
+         f"n_cfg={len(axes)};wall_s={t_split:.2f}")
+    emit("pod_sweep.legacy_cond", t_legacy / len(axes) * 1e6,
+         f"wall_s={t_legacy:.2f}")
+    emit("pod_sweep.speedup", 0,
+         f"legacy_over_split={t_legacy / t_split:.2f}x;"
+         f"max_dev={dev:.2e};halls_match={halls_ok}")
+
+
 @bench
 def scenario_sweep():
     """Beyond-the-paper scenario frontier (docs/scenarios.md): baseline +
@@ -480,6 +658,10 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--scale", type=float, default=0.04)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write {name: {us_per_call, derived}} for "
+                         "every emitted row to PATH (machine-readable "
+                         "perf trajectory; see benchmarks/README.md)")
     ap.add_argument("--sharded-probe", action="store_true",
                     help="internal: run only the multi-device leg of "
                          "sweep_speedup (expects forced host devices)")
@@ -496,6 +678,12 @@ def main(argv=None):
         fn()
         print(f"# {name} total {time.time() - t0:.1f}s", file=sys.stderr,
               flush=True)
+    if args.json:
+        # rows emitted by the sweep_speedup sharded-probe *subprocess*
+        # appear only in its own CSV stream, not here
+        with open(args.json, "w") as f:
+            json.dump(_ROWS, f, indent=2, sort_keys=True)
+            f.write("\n")
 
 
 if __name__ == "__main__":

@@ -9,10 +9,11 @@ MoE serving deployment with the throughput model.
 """
 import numpy as np
 
-from repro.core import cost, hierarchy, projections as proj, singlehall
+from repro.core import cost, hierarchy, projections as proj
 from repro.core import throughput as tp
 from repro.core.arrivals import EnvelopeSpec
 from repro.core.fleet import FleetConfig, run_fleet
+from repro.core.mc_sweep import MCAxes, mc_sweep
 
 
 def main():
@@ -24,10 +25,12 @@ def main():
               f"initial ${cost.initial_dollars_per_mw(d)/1e6:.2f}M/MW")
 
     print("\n== single-hall Monte Carlo (paper §4.4, Fig. 5a) ==")
-    for d in (d43, d31):
-        mc = singlehall.monte_carlo(d, n_trials=8, n_events=400,
-                                    year=2030, scenario=proj.HIGH, seed=0)
-        s = mc["lineup_stranding"]
+    # both designs' trials as one batched mc_sweep call (the
+    # single-configuration equivalent is singlehall.monte_carlo)
+    res = mc_sweep(MCAxes.zip(designs=[d43, d31]), n_trials=8,
+                   n_events=400, year=2030, scenario=proj.HIGH)
+    for i, d in enumerate((d43, d31)):
+        s = res.result(i)["lineup_stranding"]
         print(f"  {d.name}: median UPS stranding {np.median(s):.1%}, "
               f"P99 {np.percentile(s, 99):.1%}")
 

@@ -334,6 +334,120 @@ def generate_fleet_trace(env: EnvelopeSpec, seed: int = 0) -> Trace:
     return t.sorted_by_month()
 
 
+@dataclass
+class TraceBatch:
+    """A batch of steady-state traces: every column is `[T, E]` (trial-major).
+
+    Produced by `sample_mixed_traces` in one vectorized numpy RNG pass —
+    the batched analogue of calling `sample_mixed_trace` once per trial.
+    `trial(i)` recovers trial `i` as a plain 1-D `Trace`.
+    """
+    month: np.ndarray        # int32 [T, E]
+    class_id: np.ndarray     # int32 [T, E]
+    rack_kw: np.ndarray      # float32 [T, E]
+    n_racks: np.ndarray      # int32 [T, E]
+    is_gpu: np.ndarray       # bool [T, E]
+    is_pod: np.ndarray       # bool [T, E]
+    tier: np.ndarray         # int32 [T, E]
+    lifetime_m: np.ndarray   # int32 [T, E]
+    harvest_frac: np.ndarray  # float32 [T, E]
+
+    def __len__(self):
+        return self.month.shape[0]
+
+    def trial(self, i: int) -> Trace:
+        return Trace(**{f: getattr(self, f)[i]
+                        for f in Trace.__dataclass_fields__})
+
+
+def sample_mixed_traces(n_trials: int, n_events: int, year: int = 2028,
+                        scenario: str = proj.MED, seed: int = 0,
+                        gpu_power_share: float = 0.6,
+                        pod_racks: int = 1, quantum_racks: int = 10,
+                        la_fraction: float = 0.0,
+                        sku_kw_override: float | None = None,
+                        single_sku_gpu: bool = False) -> TraceBatch:
+    """Batched `sample_mixed_trace`: `n_trials` steady-state traces in ONE
+    vectorized numpy RNG pass (no per-trial / per-event Python loop).
+
+    The single-hall Monte Carlo engine (`repro.core.mc_sweep.mc_sweep`)
+    consumes this directly; host-side trace synthesis used to dominate its
+    wall time at small `n_events`.  Semantics match `sample_mixed_trace`
+    (class mix calibrated from mean event power, SKU clusters per Eq. 3,
+    N(μ,σ) lifetimes, LA tiers with probability `la_fraction`) with two
+    deliberate differences:
+
+    * the RNG is one `np.random.default_rng([seed, trial-batch salt])`
+      stream drawing `[T, E]` grids, so a batch is bit-for-bit
+      reproducible for equal arguments but individual trials are NOT
+      bitwise-identical to per-trial `sample_mixed_trace` calls (the
+      distributions are identical — equivalence is statistical);
+    * the Fig. 6 single-SKU mode is a *generator argument*
+      (`single_sku_gpu` + `sku_kw_override`) instead of post-hoc in-place
+      mutation: `single_sku_gpu=True` emits only GPU-class events, and
+      `sku_kw_override` replaces every GPU rack power.
+    """
+    rng = np.random.default_rng([seed, 0x6D63])         # 'mc' trial salt
+    T, E = int(n_trials), int(n_events)
+    gpu_n = pod_racks if pod_racks > 1 else 1
+    gpu_kw = proj.gpu_rack_kw(year, scenario, pod_scale=pod_racks > 1)
+
+    if single_sku_gpu:
+        cid = np.full((T, E), CLASS_GPU, np.int32)
+    else:
+        shares = {CLASS_GPU: gpu_power_share,
+                  CLASS_COMPUTE: (1 - gpu_power_share) * 0.7,
+                  CLASS_STORAGE: (1 - gpu_power_share) * 0.3}
+        # power shares → event probabilities via mean event power, with the
+        # same 64-draw calibration `sample_mixed_trace` uses (vectorized)
+        mean_event_kw = {CLASS_GPU: gpu_kw * gpu_n}
+        for cls, pmax_fn, skus in (
+                (CLASS_COMPUTE, proj.compute_rack_kw, COMPUTE_SKUS),
+                (CLASS_STORAGE, proj.storage_rack_kw, STORAGE_SKUS)):
+            alphas = np.array([a for a, _ in skus])
+            probs = np.array([p for _, p in skus])
+            draws = pmax_fn(year, scenario) * rng.choice(alphas, size=64,
+                                                         p=probs)
+            mean_event_kw[cls] = draws.mean() * quantum_racks
+        p = np.array([shares[c] / mean_event_kw[c]
+                      for c in (CLASS_GPU, CLASS_COMPUTE, CLASS_STORAGE)])
+        cid = rng.choice(np.array([CLASS_GPU, CLASS_COMPUTE, CLASS_STORAGE],
+                                  np.int32), size=(T, E),
+                         p=p / p.sum()).astype(np.int32)
+    is_gpu = cid == CLASS_GPU
+
+    # per-SKU rack power (Eq. 3), one choice grid per non-GPU class
+    def sku_kw(pmax, skus):
+        alphas = np.array([a for a, _ in skus])
+        probs = np.array([p for _, p in skus])
+        return pmax * rng.choice(alphas, size=(T, E), p=probs)
+
+    rack_kw = np.where(
+        is_gpu, gpu_kw,
+        np.where(cid == CLASS_COMPUTE,
+                 sku_kw(proj.compute_rack_kw(year, scenario), COMPUTE_SKUS),
+                 sku_kw(proj.storage_rack_kw(year, scenario), STORAGE_SKUS)))
+    if sku_kw_override is not None:
+        rack_kw = np.where(is_gpu, float(sku_kw_override), rack_kw)
+
+    tier = np.where(rng.random((T, E)) < la_fraction, TIER_LA, TIER_HA)
+    mu = np.array([LIFETIME[c][0] for c in range(3)])[cid]
+    sd = np.array([LIFETIME[c][1] for c in range(3)])[cid]
+    lifetime_m = np.maximum(12, np.round(rng.normal(mu, sd) * 12.0))
+    return TraceBatch(
+        month=np.zeros((T, E), np.int32),
+        class_id=cid,
+        rack_kw=rack_kw.astype(np.float32),
+        n_racks=np.where(is_gpu, gpu_n, quantum_racks).astype(np.int32),
+        is_gpu=is_gpu,
+        is_pod=is_gpu & (pod_racks > 1),
+        tier=tier.astype(np.int32),
+        lifetime_m=lifetime_m.astype(np.int32),
+        harvest_frac=np.array([HARVEST_FRAC[c]
+                               for c in range(3)])[cid].astype(np.float32),
+    )
+
+
 def sample_mixed_trace(n_events: int, year: int = 2028,
                        scenario: str = proj.MED, seed: int = 0,
                        gpu_power_share: float = 0.6,

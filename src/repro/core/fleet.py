@@ -116,24 +116,96 @@ class FleetTrace(NamedTuple):
         )
 
 
-def _month_e_max(trace: Trace, months: int) -> int:
-    """Largest per-month event count (the inner scan length)."""
-    starts = np.searchsorted(trace.month, np.arange(months))
-    ends = np.searchsorted(trace.month, np.arange(months), side="right")
-    return max(1, int((ends - starts).max()))
+def _month_e_max(trace: Trace, months: int,
+                 select: np.ndarray | None = None) -> int:
+    """Largest per-month event count (the inner scan length), optionally
+    over the `select`-ed subset of events (split-trace pod/cluster
+    windows)."""
+    month = np.asarray(trace.month)
+    if select is not None:
+        month = month[np.asarray(select)]
+    starts = np.searchsorted(month, np.arange(months))
+    ends = np.searchsorted(month, np.arange(months), side="right")
+    return max(1, int((ends - starts).max())) if len(month) else 1
 
 
 def _month_slices(trace: Trace, months: int, e_max: int | None = None,
-                  modulo: int | None = None):
+                  modulo: int | None = None,
+                  select: np.ndarray | None = None):
     """Per-month event-index windows [M, e_max] plus validity mask.
-    `modulo` must equal the (padded) device trace length."""
-    starts = np.searchsorted(trace.month, np.arange(months))
-    ends = np.searchsorted(trace.month, np.arange(months), side="right")
-    e_max = e_max or max(1, int((ends - starts).max()))
-    idx = starts[:, None] + np.arange(e_max)[None, :]       # [M, e_max]
-    valid = idx < ends[:, None]
+    `modulo` must equal the (padded) device trace length.  With `select`
+    (boolean event mask) the windows cover only the selected events —
+    indices still refer to the full trace — which is how the split-trace
+    scan gets separate pod and cluster windows per month."""
+    month = np.asarray(trace.month)
+    eids = None
+    if select is not None:
+        eids = np.flatnonzero(np.asarray(select))
+        month = month[eids]
+    starts = np.searchsorted(month, np.arange(months))
+    ends = np.searchsorted(month, np.arange(months), side="right")
+    e_max = e_max or (max(1, int((ends - starts).max()))
+                      if len(month) else 1)
+    pos = starts[:, None] + np.arange(e_max)[None, :]       # [M, e_max]
+    valid = pos < ends[:, None]
     E = modulo or max(1, len(trace))
-    return (idx % E).astype(np.int32), valid, e_max
+    if eids is None:
+        idx = pos % E
+    elif len(eids):
+        idx = np.where(valid, eids[pos % len(eids)], 0)
+    else:
+        idx = np.zeros_like(pos)
+    return idx.astype(np.int32), valid, e_max
+
+
+def _pod_scan_len(traces) -> int:
+    """Static rack-scan length for the split-trace pod path: the largest
+    pod size across `traces` (capped at the `MAX_POD_RACKS` bound)."""
+    n = 1
+    for t in traces:
+        pods = np.asarray(t.is_pod)
+        if pods.any():
+            n = max(n, int(np.asarray(t.n_racks)[pods].max()))
+    return min(n, MAX_POD_RACKS)
+
+
+def _event_windows(trace: Trace, months: int, split_pods: bool,
+                   e_max: int | None = None, ep_max: int | None = None,
+                   modulo: int | None = None):
+    """(idx, valid, idx_pod, valid_pod) for `simulate_lifecycle`.
+
+    `split_pods=True` partitions each month's window into pod events
+    (placed first — the order generated traces already have) and cluster
+    events; otherwise the first window covers all events and the pod
+    window is a 1-wide all-invalid dummy (ignored by the compiled
+    non-split paths).
+
+    The split preserves placement order and PRNG keys ONLY when pods
+    precede clusters within every month — always true for
+    `generate_fleet_trace` output (GPU class emitted first, stable month
+    sort).  Custom traces violating that order are rejected rather than
+    silently reordered: sort them pods-first per month, or run with
+    `legacy_pod_cond=True`."""
+    if split_pods:
+        pod = np.asarray(trace.is_pod)
+        month = np.asarray(trace.month)
+        same_month = month[1:] == month[:-1]
+        if bool(np.any(same_month & pod[1:] & ~pod[:-1])):
+            raise ValueError(
+                "split-trace scan needs pod events to precede cluster "
+                "events within each month (the generated-trace order); "
+                "sort the trace pods-first per month or use "
+                "legacy_pod_cond=True")
+        idx, valid, _ = _month_slices(trace, months, e_max=e_max,
+                                      modulo=modulo, select=~pod)
+        idx_p, valid_p, _ = _month_slices(trace, months, e_max=ep_max,
+                                          modulo=modulo, select=pod)
+    else:
+        idx, valid, _ = _month_slices(trace, months, e_max=e_max,
+                                      modulo=modulo)
+        idx_p = np.zeros((months, ep_max or 1), np.int32)
+        valid_p = np.zeros((months, ep_max or 1), bool)
+    return idx, valid, idx_p, valid_p
 
 
 class SimOutputs(NamedTuple):
@@ -167,25 +239,53 @@ def _masked_percentiles(x, mask, qs):
 _NEW_HALL_BIAS = 1e6   # keeps placements in existing halls when feasible
 
 
-def simulate_lifecycle(jt: JaxTopology, ft: FleetTrace, idx, valid, policy,
-                       seed, h_cap, n_real, *, harvest: bool,
-                       mature_months: int,
-                       with_pods: bool = True) -> SimOutputs:
+def simulate_lifecycle(jt: JaxTopology, ft: FleetTrace, idx, valid,
+                       idx_pod, valid_pod, policy, seed, h_cap, n_real, *,
+                       harvest: bool, mature_months: int,
+                       with_pods: bool = True,
+                       legacy_pod_cond: bool = False,
+                       pod_scan_len: int = MAX_POD_RACKS) -> SimOutputs:
     """Run the full monthly lifecycle as a single `lax.scan`.
 
     All positional arguments are device-typed (vmap-able); `harvest`,
-    `mature_months` and `with_pods` are static.  `h_cap` caps hall
-    opening per configuration (padded fleets share a larger static hall
-    count).  `with_pods=False` (trace has no multi-row pods) replaces the
-    try-then-open-a-hall retry with one biased placement attempt over
-    `halls < n+1` — exactly equivalent for single-row clusters (a failed
-    first attempt means no existing-hall row is feasible, so the biased
-    argmin picks the same row either way) and roughly an order of
-    magnitude cheaper under `vmap`, where `lax.cond` runs both branches.
+    `mature_months`, `with_pods` and `legacy_pod_cond` are static.
+    `h_cap` caps hall opening per configuration (padded fleets share a
+    larger static hall count).
+
+    Placement is cost-shaped by the trace's content, because `vmap`
+    evaluates both sides of every `lax.cond`:
+
+    * `with_pods=False` (no multi-row pods): `idx`/`valid` window ALL
+      events and each is placed with one biased attempt over
+      `halls < n+1` — exactly equivalent to the try-then-open-a-hall
+      retry for single-row clusters (a failed first attempt means no
+      existing-hall row is feasible, so the biased argmin picks the same
+      row either way) and roughly an order of magnitude cheaper batched.
+    * `with_pods=True` (split-trace scan): each month runs TWO scans —
+      `idx_pod`/`valid_pod` window the month's pod events (placed by
+      `placement._place_pod` with the attempt/retry pair, which pods
+      genuinely need: a pod that fails in existing halls must retry
+      whole against the new hall), then `idx`/`valid` window the
+      cluster events (cheap biased attempt).  Cluster events no longer
+      pay for the 8-step pod scan and pods no longer pay for the
+      cluster branch.  Trace order is preserved because generated
+      traces emit pods before clusters within every month (GPU class
+      first, stable month sort); PRNG keys stay aligned with the
+      interleaved order via the per-month pod-count offset.
+      `pod_scan_len` (static, ≥ the largest pod's `n_racks`) trims the
+      rack scan to the batch's real max pod size instead of the
+      `MAX_POD_RACKS` bound.
+    * `legacy_pod_cond=True` (benchmark/regression reference): the
+      pre-split behavior — `idx`/`valid` window ALL events and each one
+      runs `placement.place`'s `lax.cond(is_pod, …)` plus the retry
+      `lax.cond`, evaluating both pod and cluster branches per event
+      under `vmap`.  `benchmarks/run.py --only pod_sweep_speedup`
+      measures the split-trace win against exactly this path.
     """
     H = jt.hall_liq_cap.shape[0]
     E = ft.month.shape[0]
     M = idx.shape[0]
+    split_pods = with_pods and not legacy_pod_cond
 
     state = pl.init_state_from(jt)
     reg_rows = jnp.full((E, MAX_POD_RACKS), -1, jnp.int32)
@@ -199,10 +299,76 @@ def simulate_lifecycle(jt: JaxTopology, ft: FleetTrace, idx, valid, policy,
     policy = jnp.asarray(policy, jnp.int32)
     h_cap = jnp.asarray(h_cap, jnp.int32)
 
+    # ---- placement modes (see docstring) ----
+    def place_cluster(st, n_act, dep, k, n_try):
+        """One biased attempt over halls < n_try (single-row clusters)."""
+        bias = jnp.where(jt.row_hall >= n_act, _NEW_HALL_BIAS, 0.0)
+        st_f, ok_f, rows_f, counts_f, row = pl.place_cluster_in_row(
+            jt, st, dep, policy, k, jt.row_hall < n_try, score_bias=bias)
+        in_existing = ok_f & (jt.row_hall[jnp.maximum(row, 0)] < n_act)
+        n_f = jnp.where(in_existing, n_act, n_try)
+        return st_f, ok_f, rows_f, counts_f, n_f
+
+    def place_pod(st, n_act, dep, k, n_try):
+        """Pod attempt in existing halls, whole-pod retry incl. the new
+        hall (pods need the atomic retry: a partial fit must not lock a
+        domain the full pod cannot share)."""
+        st1, ok1, rows1, counts1 = pl._place_pod(jt, st, dep, policy, k,
+                                                 jt.row_hall < n_act,
+                                                 max_racks=pod_scan_len)
+
+        def retry():
+            st2, ok2, rows2, counts2 = pl._place_pod(
+                jt, st, dep, policy, k, jt.row_hall < n_try,
+                max_racks=pod_scan_len)
+            return st2, ok2, rows2, counts2, n_try
+
+        return jax.lax.cond(
+            ok1, lambda: (st1, ok1, rows1, counts1, n_act), retry)
+
+    def place_any(st, n_act, dep, k, n_try):
+        """Pre-split reference: `place`'s is_pod cond + attempt/retry."""
+        def attempt(n):
+            return pl.place(jt, st, dep, policy, k, jt.row_hall < n)
+
+        st1, ok1, rows1, counts1 = attempt(n_act)
+
+        def retry():
+            st2, ok2, rows2, counts2 = attempt(n_try)
+            return st2, ok2, rows2, counts2, n_try
+
+        return jax.lax.cond(
+            ok1, lambda: (st1, ok1, rows1, counts1, n_act), retry)
+
+    def scan_events(carry, idx_m, valid_m, mkey, key_off, place_fn):
+        """Inner event scan shared by every mode.  `key_off` keeps the
+        per-event fold_in keys aligned with the interleaved event order
+        when a month is split into pod + cluster scans."""
+        def body(carry, i):
+            st, n_act, rr, rc, plcd = carry
+            e = idx_m[i]
+            dep = Deployment(ft.rack_kw[e], ft.n_racks[e], ft.is_gpu[e],
+                             ft.tier[e], ft.is_pod[e])
+            k = jax.random.fold_in(mkey, key_off + i)
+            n_try = jnp.minimum(n_act + 1, h_cap)
+            st_f, ok_f, rows_f, counts_f, n_f = place_fn(st, n_act, dep,
+                                                         k, n_try)
+            live = valid_m[i]
+            ok_f = ok_f & live
+            st = pl._tree_where(ok_f, st_f, st)
+            n_act = jnp.where(live, n_f, n_act)
+            rr = rr.at[e].set(jnp.where(ok_f, rows_f, rr[e]))
+            rc = rc.at[e].set(jnp.where(ok_f, counts_f, rc[e]))
+            plcd = plcd.at[e].set(jnp.where(live, ok_f, plcd[e]))
+            return (st, n_act, rr, rc, plcd), None
+
+        return jax.lax.scan(body, carry,
+                            jnp.arange(idx_m.shape[0]))[0]
+
     def month_step(carry, xs):
         (state, reg_rows, reg_counts, placed, harvested, removed,
          n_active, act_month) = carry
-        m, idx_m, valid_m = xs
+        m, idx_m, valid_m, idx_pod_m, valid_pod_m = xs
         mkey = jax.random.fold_in(key, m)
 
         # ---- 1. decommission expired racks ----
@@ -222,56 +388,22 @@ def simulate_lifecycle(jt: JaxTopology, ft: FleetTrace, idx, valid, policy,
             harvested = harvested | h
 
         # ---- 3. place this month's arrivals ----
-        def body(carry, i):
-            st, n_act, rr, rc, plcd = carry
-            e = idx_m[i]
-            dep = Deployment(ft.rack_kw[e], ft.n_racks[e], ft.is_gpu[e],
-                             ft.tier[e], ft.is_pod[e])
-            k = jax.random.fold_in(mkey, i)
-            n_try = jnp.minimum(n_act + 1, h_cap)
-
-            if with_pods:
-                # perf: under vmap this lax.cond evaluates BOTH branches
-                # (first attempt AND the open-a-hall retry) for every
-                # batched configuration; a split-trace (pods vs clusters)
-                # scan would cut pod sweeps ~2x — see ROADMAP.md
-                # "Pod-path cost under vmap".
-                def attempt(n):
-                    return pl.place(jt, st, dep, policy, k, jt.row_hall < n)
-
-                st1, ok1, rows1, counts1 = attempt(n_act)
-
-                def retry():
-                    st2, ok2, rows2, counts2 = attempt(n_try)
-                    return st2, ok2, rows2, counts2, n_try
-
-                st_f, ok_f, rows_f, counts_f, n_f = jax.lax.cond(
-                    ok1, lambda: (st1, ok1, rows1, counts1, n_act), retry)
-            else:
-                bias = jnp.where(jt.row_hall >= n_act, _NEW_HALL_BIAS, 0.0)
-                st_f, ok_f, row = pl.place_in_row(
-                    jt, st, dep, dep.n_racks, policy, k,
-                    jt.row_hall < n_try, score_bias=bias)
-                rows_f = jnp.full((MAX_POD_RACKS,), -1, jnp.int32
-                                  ).at[0].set(row)
-                counts_f = jnp.zeros((MAX_POD_RACKS,)).at[0].set(
-                    jnp.where(ok_f, dep.n_racks.astype(jnp.float32), 0.0))
-                in_existing = ok_f & (jt.row_hall[jnp.maximum(row, 0)]
-                                      < n_act)
-                n_f = jnp.where(in_existing, n_act, n_try)
-
-            live = valid_m[i]
-            ok_f = ok_f & live
-            st = pl._tree_where(ok_f, st_f, st)
-            n_act = jnp.where(live, n_f, n_act)
-            rr = rr.at[e].set(jnp.where(ok_f, rows_f, rr[e]))
-            rc = rc.at[e].set(jnp.where(ok_f, counts_f, rc[e]))
-            plcd = plcd.at[e].set(jnp.where(live, ok_f, plcd[e]))
-            return (st, n_act, rr, rc, plcd), None
-
-        (state, n_active, reg_rows, reg_counts, placed), _ = jax.lax.scan(
-            body, (state, n_active, reg_rows, reg_counts, placed),
-            jnp.arange(idx_m.shape[0]))
+        pcarry = (state, n_active, reg_rows, reg_counts, placed)
+        if split_pods:
+            # pods first (the generated order), then clusters with the
+            # fold_in offset continuing where the pod window left off
+            pcarry = scan_events(pcarry, idx_pod_m, valid_pod_m, mkey,
+                                 jnp.zeros((), jnp.int32), place_pod)
+            n_pods = jnp.sum(valid_pod_m.astype(jnp.int32))
+            pcarry = scan_events(pcarry, idx_m, valid_m, mkey, n_pods,
+                                 place_cluster)
+        elif with_pods:
+            pcarry = scan_events(pcarry, idx_m, valid_m, mkey,
+                                 jnp.zeros((), jnp.int32), place_any)
+        else:
+            pcarry = scan_events(pcarry, idx_m, valid_m, mkey,
+                                 jnp.zeros((), jnp.int32), place_cluster)
+        state, n_active, reg_rows, reg_counts, placed = pcarry
 
         act_month = jnp.where(
             (act_month < 0) & (jnp.arange(H) < n_active), m, act_month)
@@ -283,7 +415,8 @@ def simulate_lifecycle(jt: JaxTopology, ft: FleetTrace, idx, valid, policy,
     carry0 = (state, reg_rows, reg_counts, placed, harvested, removed,
               n_active, act_month)
     xs = (jnp.arange(M, dtype=jnp.int32), jnp.asarray(idx),
-          jnp.asarray(valid))
+          jnp.asarray(valid), jnp.asarray(idx_pod),
+          jnp.asarray(valid_pod))
     carry, (halls, deployed, hs_hist, am_hist) = jax.lax.scan(
         month_step, carry0, xs)
     state, placed = carry[0], carry[3]
@@ -310,13 +443,17 @@ def simulate_lifecycle(jt: JaxTopology, ft: FleetTrace, idx, valid, policy,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("harvest", "mature_months", "with_pods"))
-def _simulate_jit(jt, ft, idx, valid, policy, seed, h_cap, n_real,
-                  harvest, mature_months, with_pods):
-    return simulate_lifecycle(jt, ft, idx, valid, policy, seed, h_cap,
-                              n_real, harvest=harvest,
+                   static_argnames=("harvest", "mature_months", "with_pods",
+                                    "legacy_pod_cond", "pod_scan_len"))
+def _simulate_jit(jt, ft, idx, valid, idx_pod, valid_pod, policy, seed,
+                  h_cap, n_real, harvest, mature_months, with_pods,
+                  legacy_pod_cond=False, pod_scan_len=MAX_POD_RACKS):
+    return simulate_lifecycle(jt, ft, idx, valid, idx_pod, valid_pod,
+                              policy, seed, h_cap, n_real, harvest=harvest,
                               mature_months=mature_months,
-                              with_pods=with_pods)
+                              with_pods=with_pods,
+                              legacy_pod_cond=legacy_pod_cond,
+                              pod_scan_len=pod_scan_len)
 
 
 def make_fleet_result(out, months: int, lineups_per_hall: int,
@@ -376,15 +513,18 @@ def run_fleet(cfg: FleetConfig, trace: Trace | None = None) -> FleetResult:
     topo = build_topology(design, H)
     jt = pl.jax_topology(topo)
     ft = FleetTrace.from_trace(trace)
-    idx, valid, _ = _month_slices(trace, months)
+    with_pods = bool(np.asarray(trace.is_pod).any())
+    idx, valid, idx_p, valid_p = _event_windows(trace, months, with_pods)
 
     out = _simulate_jit(jt, ft, jnp.asarray(idx), jnp.asarray(valid),
+                        jnp.asarray(idx_p), jnp.asarray(valid_p),
                         jnp.asarray(cfg.policy, jnp.int32),
                         jnp.asarray(cfg.seed, jnp.int32),
                         jnp.asarray(H, jnp.int32),
                         jnp.asarray(len(trace), jnp.int32),
                         harvest=cfg.harvest,
                         mature_months=cfg.mature_months,
-                        with_pods=bool(np.asarray(trace.is_pod).any()))
+                        with_pods=with_pods,
+                        pod_scan_len=_pod_scan_len([trace]))
     return make_fleet_result(out, months, topo.lineups_per_hall,
                              topo.lineup_is_active, design, env)

@@ -229,10 +229,31 @@ def place_in_row(jt: JaxTopology, state: HallState, dep: Deployment,
     return _tree_where(ok, new_state, state), ok, jnp.where(ok, row, -1)
 
 
+def place_cluster_in_row(jt: JaxTopology, state: HallState,
+                         dep: Deployment, policy, key, row_active,
+                         score_bias=None):
+    """`place_in_row` for a whole single-row cluster, with its result
+    expanded to the `[MAX_POD_RACKS]` rows/counts registry convention
+    `place` uses.  Returns (state', ok, rows, counts, row) — the shared
+    cluster path of `place`, the fleet scan, and the single-hall
+    simulator."""
+    st, ok, row = place_in_row(jt, state, dep, dep.n_racks, policy, key,
+                               row_active, score_bias=score_bias)
+    rows = jnp.full((MAX_POD_RACKS,), -1, jnp.int32).at[0].set(row)
+    counts = jnp.zeros((MAX_POD_RACKS,)).at[0].set(
+        jnp.where(ok, dep.n_racks.astype(jnp.float32), 0.0))
+    return st, ok, rows, counts, row
+
+
 def _place_pod(jt: JaxTopology, state: HallState, dep: Deployment,
-               policy, key, row_active):
+               policy, key, row_active, max_racks: int = MAX_POD_RACKS):
     """Place a GPU pod rack-by-rack; all racks must land in the same power
-    domain (cross-row cables, paper §4.1); atomic commit."""
+    domain (cross-row cables, paper §4.1); atomic commit.
+
+    `max_racks` is the static rack-scan length; callers that know the
+    largest pod in their trace (the fleet split-trace scan) pass it to
+    skip dead scan steps — it must be ≥ every pod's `n_racks`.  The
+    returned registry rows/counts are always `[MAX_POD_RACKS]`."""
     state0 = state
 
     def body(carry, i):
@@ -248,7 +269,10 @@ def _place_pod(jt: JaxTopology, state: HallState, dep: Deployment,
 
     (state_n, ok, _), rows = jax.lax.scan(
         body, (state, jnp.asarray(True), jnp.asarray(-1, jnp.int32)),
-        jnp.arange(MAX_POD_RACKS))
+        jnp.arange(max_racks))
+    if max_racks < MAX_POD_RACKS:
+        rows = jnp.concatenate(
+            [rows, jnp.full((MAX_POD_RACKS - max_racks,), -1, jnp.int32)])
     counts = jnp.where((rows >= 0) & ok, 1.0, 0.0)
     rows = jnp.where(ok, rows, -1)
     return _tree_where(ok, state_n, state0), ok, rows, counts
@@ -266,12 +290,8 @@ def place(jt: JaxTopology, state: HallState, dep: Deployment, policy, key,
         row_active = jnp.ones((jt.row_cap.shape[0],), bool)
 
     def cluster():
-        st, ok, row = place_in_row(jt, state, dep, dep.n_racks, policy, key,
-                                   row_active)
-        rows = jnp.full((MAX_POD_RACKS,), -1, jnp.int32).at[0].set(row)
-        counts = jnp.zeros((MAX_POD_RACKS,)).at[0].set(
-            jnp.where(ok, dep.n_racks.astype(jnp.float32), 0.0))
-        return st, ok, rows, counts
+        return place_cluster_in_row(jt, state, dep, policy, key,
+                                    row_active)[:4]
 
     return jax.lax.cond(
         dep.is_pod,

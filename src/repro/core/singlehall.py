@@ -4,20 +4,23 @@ Each trial: instantiate one hall, place arrivals until SATURATION_FAILS
 consecutive placements fail, apply harvesting, resume placement until
 another SATURATION_FAILS consecutive failures.  Trials are vmapped; the
 event loop is a `lax.scan` over a pre-generated arrival trace.
+
+This module owns the per-trial machinery (`run_trial` and friends); the
+batched front end that evaluates whole (design × SKU-kW × policy × seed)
+grids in one jitted/vmapped — optionally device-sharded — call lives in
+`repro.core.mc_sweep`.  `monte_carlo` here is the exact one-configuration
+wrapper over it.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import arrivals, placement as pl
-from .hierarchy import DesignSpec, build_topology
-from .placement import (DEFAULT_POLICY, Deployment, HallState, JaxTopology,
-                        MAX_POD_RACKS)
+from .hierarchy import DesignSpec
+from .placement import DEFAULT_POLICY, Deployment, HallState, JaxTopology
 
 SATURATION_FAILS = 100
 
@@ -52,15 +55,25 @@ class TrialResult(NamedTuple):
 
 
 def _fill_phase(jt: JaxTopology, state: HallState, trace: TraceArrays,
-                policy, key) -> TrialResult:
+                policy, key, with_pods: bool = True) -> TrialResult:
+    """Place the trace until saturation.  `with_pods` is static: pod-free
+    traces (rack-scale GPUs, `pod_racks=1`) skip `place`'s
+    `lax.cond(is_pod, …)` — whose pod branch vmap would evaluate for
+    every event — and call the single-row `place_in_row` directly
+    (exactly the cluster branch `place` would take)."""
     E = trace.rack_kw.shape[0]
+    R = jt.row_cap.shape[0]
 
     def body(carry, i):
         st, streak = carry
         frozen = streak >= SATURATION_FAILS
         dep = trace.event(i)
         k = jax.random.fold_in(key, i)
-        st2, ok, rows, counts = pl.place(jt, st, dep, policy, k)
+        if with_pods:
+            st2, ok, rows, counts = pl.place(jt, st, dep, policy, k)
+        else:
+            st2, ok, rows, counts, _ = pl.place_cluster_in_row(
+                jt, st, dep, policy, k, jnp.ones((R,), bool))
         ok = ok & ~frozen
         st = pl._tree_where(ok, st2, st)
         rows = jnp.where(ok, rows, -1)
@@ -84,25 +97,17 @@ def _apply_harvest(jt: JaxTopology, res: TrialResult,
 
 def run_trial(jt: JaxTopology, topo_init: HallState,
               trace_a: TraceArrays, trace_b: TraceArrays,
-              policy, key, harvest: bool = True):
+              policy, key, harvest: bool = True, with_pods: bool = True):
     """One MC trial: fill → harvest → refill.  Returns final state and the
-    two phase results."""
+    two phase results.  `harvest` and `with_pods` are static (jit static
+    argnames upstream): the non-harvest variant never traces the harvest
+    branch, and pod-free traces compile the cheap single-row placement
+    (see `_fill_phase`)."""
     ka, kb = jax.random.split(key)
-    res_a = _fill_phase(jt, topo_init, trace_a, policy, ka)
-    state = jax.lax.cond(jnp.asarray(harvest),
-                         lambda: _apply_harvest(jt, res_a, trace_a),
-                         lambda: res_a.state)
-    res_b = _fill_phase(jt, state, trace_b, policy, kb)
+    res_a = _fill_phase(jt, topo_init, trace_a, policy, ka, with_pods)
+    state = _apply_harvest(jt, res_a, trace_a) if harvest else res_a.state
+    res_b = _fill_phase(jt, state, trace_b, policy, kb, with_pods)
     return res_b.state, res_a, res_b
-
-
-@functools.partial(jax.jit, static_argnames=("policy", "harvest"))
-def _run_trials(jt, init, ta, tb, keys, policy, harvest):
-    """Vmapped trials; jit-cached across same-shaped topologies/traces so
-    parameter sweeps (Fig. 6) compile once."""
-    return jax.vmap(lambda t_a, t_b, k: run_trial(jt, init, t_a, t_b,
-                                                  policy, k, harvest)
-                    )(ta, tb, keys)
 
 
 def monte_carlo(design: DesignSpec, n_trials: int = 32, n_events: int = 600,
@@ -114,54 +119,20 @@ def monte_carlo(design: DesignSpec, n_trials: int = 32, n_events: int = 600,
                 single_sku_gpu: bool = False):
     """Run `n_trials` single-hall MC trials.  Returns dict of metrics.
 
-    `single_sku_gpu` + `sku_kw_override` reproduce the paper's Fig. 6
-    single-SKU sweep (repeated identical GPU deployments until saturation).
+    Exact thin wrapper over the batched engine: one-configuration
+    `repro.core.mc_sweep.mc_sweep` call (which also serves whole
+    parameter grids — Fig. 6's 21-point kW sweep × 2 designs is ONE
+    call there).  Trial traces come from the vectorized
+    `arrivals.sample_mixed_traces` (one numpy RNG pass for the whole
+    trial batch); `single_sku_gpu` + `sku_kw_override` reproduce the
+    paper's Fig. 6 single-SKU sweep (repeated identical GPU deployments
+    until saturation) as generator arguments.
     """
-    topo = build_topology(design)
-    jt = pl.jax_topology(topo)
-    init = pl.init_state(topo)
-
-    tas, tbs = [], []
-    for i in range(n_trials):
-        if single_sku_gpu:
-            t = arrivals.sample_mixed_trace(n_events, year, scenario,
-                                            seed + 7919 * i, 1.0,
-                                            pod_racks, quantum_racks)
-            t.rack_kw[:] = sku_kw_override
-            t.class_id[:] = 0
-            t.is_gpu[:] = True
-        else:
-            t = arrivals.sample_mixed_trace(n_events, year, scenario,
-                                            seed + 7919 * i, gpu_power_share,
-                                            pod_racks, quantum_racks)
-            if sku_kw_override is not None:
-                t.rack_kw[t.is_gpu] = sku_kw_override
-        tas.append(t)
-        tbs.append(arrivals.sample_mixed_trace(
-            max(200, n_events // 3), year, scenario, seed + 7919 * i + 1,
-            1.0 if single_sku_gpu else gpu_power_share, pod_racks,
-            quantum_racks))
-        if single_sku_gpu:
-            tbs[-1].rack_kw[:] = sku_kw_override
-            tbs[-1].is_gpu[:] = True
-
-    stack = lambda ts: jax.tree.map(lambda *xs: jnp.stack(xs),
-                                    *[TraceArrays.from_trace(t) for t in ts])
-    ta, tb = stack(tas), stack(tbs)
-    keys = jax.random.split(jax.random.PRNGKey(seed), n_trials)
-
-    state, res_a, res_b = _run_trials(jt, init, ta, tb, keys, policy,
-                                      harvest)
-
-    lineup_str = jax.vmap(lambda s: pl.lineup_stranding(jt, s))(state)
-    hall_str = jax.vmap(lambda s: pl.hall_stranding(jt, s))(state)[:, 0]
-    deployed = jax.vmap(pl.deployed_kw)(state)
-    return {
-        "lineup_stranding": np.asarray(lineup_str),   # [T, X]
-        "hall_stranding": np.asarray(hall_str),       # [T]
-        "deployed_kw": np.asarray(deployed),          # [T]
-        "ha_capacity_kw": design.ha_capacity_kw,
-        "saturated": np.asarray(res_b.saturated),
-        "placed_a": np.asarray(res_a.placed),
-        "placed_b": np.asarray(res_b.placed),
-    }
+    from .mc_sweep import MCAxes, mc_sweep   # deferred: avoids import cycle
+    axes = MCAxes.zip(designs=[design], sku_kw=[sku_kw_override],
+                      policies=[policy], seeds=[seed])
+    res = mc_sweep(axes, n_trials=n_trials, n_events=n_events, year=year,
+                   scenario=scenario, gpu_power_share=gpu_power_share,
+                   pod_racks=pod_racks, quantum_racks=quantum_racks,
+                   harvest=harvest, single_sku_gpu=single_sku_gpu)
+    return res.result(0)

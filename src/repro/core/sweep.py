@@ -43,10 +43,10 @@ from jax.sharding import NamedSharding
 from . import cost, placement as pl
 from .arrivals import EnvelopeSpec, Trace, generate_fleet_trace
 from .fleet import (FleetConfig, FleetResult, FleetTrace, _auto_halls,
-                    _month_e_max, _month_slices, make_fleet_result,
-                    simulate_lifecycle)
+                    _event_windows, _month_e_max, _pod_scan_len,
+                    make_fleet_result, simulate_lifecycle)
 from .hierarchy import DesignSpec, build_topology
-from .placement import DEFAULT_POLICY
+from .placement import DEFAULT_POLICY, MAX_POD_RACKS
 from repro.sharding import axes as shax
 
 
@@ -186,33 +186,42 @@ class SweepResult:
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("harvest", "mature_months", "with_pods"))
-def _sweep_jit(jt, ft, idx, valid, policy, seed, h_cap, n_real, harvest,
-               mature_months, with_pods):
+                   static_argnames=("harvest", "mature_months", "with_pods",
+                                    "legacy_pod_cond", "pod_scan_len"))
+def _sweep_jit(jt, ft, idx, valid, idx_pod, valid_pod, policy, seed, h_cap,
+               n_real, harvest, mature_months, with_pods,
+               legacy_pod_cond=False, pod_scan_len=MAX_POD_RACKS):
     fn = functools.partial(simulate_lifecycle, harvest=harvest,
-                           mature_months=mature_months, with_pods=with_pods)
-    return jax.vmap(fn)(jt, ft, idx, valid, policy, seed, h_cap, n_real)
+                           mature_months=mature_months, with_pods=with_pods,
+                           legacy_pod_cond=legacy_pod_cond,
+                           pod_scan_len=pod_scan_len)
+    return jax.vmap(fn)(jt, ft, idx, valid, idx_pod, valid_pod, policy,
+                        seed, h_cap, n_real)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("harvest", "mature_months", "with_pods",
-                                    "mesh"))
-def _sharded_sweep_jit(jt, ft, idx, valid, policy, seed, h_cap, n_real,
-                       harvest, mature_months, with_pods, mesh):
+                                    "pod_scan_len", "mesh"))
+def _sharded_sweep_jit(jt, ft, idx, valid, idx_pod, valid_pod, policy, seed,
+                       h_cap, n_real, harvest, mature_months, with_pods,
+                       pod_scan_len, mesh):
     """`_sweep_jit` with the configuration axis split over `mesh`: each
     device vmaps only its own B/D slab.  No collectives — configurations
     are independent — so out_specs keep everything config-sharded."""
     fn = functools.partial(simulate_lifecycle, harvest=harvest,
-                           mature_months=mature_months, with_pods=with_pods)
+                           mature_months=mature_months, with_pods=with_pods,
+                           pod_scan_len=pod_scan_len)
     spec = shax.config_spec()
     sharded = shax.shard_map(jax.vmap(fn), mesh=mesh,
-                             in_specs=(spec,) * 8, out_specs=spec,
+                             in_specs=(spec,) * 10, out_specs=spec,
                              check_vma=False)
-    return sharded(jt, ft, idx, valid, policy, seed, h_cap, n_real)
+    return sharded(jt, ft, idx, valid, idx_pod, valid_pod, policy, seed,
+                   h_cap, n_real)
 
 
 def _prepare(axes: SweepAxes, n_halls_max: int,
-             traces: Sequence[Trace] | None):
+             traces: Sequence[Trace] | None,
+             legacy_pod_cond: bool = False):
     """Host-side batch assembly shared by `sweep` and `sharded_sweep`.
 
     Pads every configuration to common static shapes, **bucketed** so
@@ -224,13 +233,16 @@ def _prepare(axes: SweepAxes, n_halls_max: int,
       rows are never feasible, padded line-ups are inactive);
     * trace events `E_max` — max trace length, bucketed to 64
       (padding events arrive at month `M`, beyond the horizon);
-    * per-month event window `e_max` — max monthly arrival count,
-      bucketed to 4.
+    * per-month event windows — max monthly cluster count bucketed to 4
+      and, for pod traces on the split-trace path, max monthly pod
+      count bucketed to 2 (pod scan steps are ~8× a cluster step, so
+      the pod window is padded more tightly).
 
     Returns `(args, months, topos, X_pad, with_pods)` where `args` is the
-    8-tuple of stacked device inputs for `simulate_lifecycle` (leading
+    10-tuple of stacked device inputs for `simulate_lifecycle` (leading
     axis = configuration) and `topos` the per-configuration padded host
-    topologies.
+    topologies.  `legacy_pod_cond=True` windows all events together for
+    the pre-split reference path (see `simulate_lifecycle`).
     """
     B = len(axes)
     if B == 0:
@@ -264,19 +276,32 @@ def _prepare(axes: SweepAxes, n_halls_max: int,
                       *[FleetTrace.from_trace(t, pad_to=E_max,
                                               pad_month=months)
                         for t in traces])
-    e_max = bucket(max(_month_e_max(t, months) for t in traces), 4)
-    slices = [_month_slices(t, months, e_max=e_max, modulo=E_max)
-              for t in traces]
-    idx = jnp.asarray(np.stack([s[0] for s in slices]))
-    valid = jnp.asarray(np.stack([s[1] for s in slices]))
+    with_pods = any(bool(np.asarray(t.is_pod).any()) for t in traces)
+    split = with_pods and not legacy_pod_cond
+    pod_sel = [np.asarray(t.is_pod) for t in traces]
+    e_max = bucket(max(_month_e_max(t, months,
+                                    select=~p if split else None)
+                       for t, p in zip(traces, pod_sel)), 4)
+    # pod windows stay exact (no bucket): a pod scan step costs ~16
+    # cluster steps (two 8-rack `_place_pod` scans), so one padded pod
+    # slot per month would erase most of the split-trace win; monthly
+    # pod counts are small and stable within a study, so the jit cache
+    # still carries across same-scale grids.
+    ep_max = (max(_month_e_max(t, months, select=p)
+                  for t, p in zip(traces, pod_sel)) if split else 1)
+    windows = [_event_windows(t, months, split, e_max=e_max, ep_max=ep_max,
+                              modulo=E_max) for t in traces]
+    idx = jnp.asarray(np.stack([w[0] for w in windows]))
+    valid = jnp.asarray(np.stack([w[1] for w in windows]))
+    idx_pod = jnp.asarray(np.stack([w[2] for w in windows]))
+    valid_pod = jnp.asarray(np.stack([w[3] for w in windows]))
 
-    args = (jt, ft, idx, valid,
+    args = (jt, ft, idx, valid, idx_pod, valid_pod,
             jnp.asarray(axes.policies, jnp.int32),
             jnp.asarray(axes.seeds, jnp.int32),
             jnp.asarray(h_caps, jnp.int32),
             jnp.asarray([len(t) for t in traces], jnp.int32))
-    with_pods = any(bool(np.asarray(t.is_pod).any()) for t in traces)
-    return args, months, topos, X_pad, with_pods
+    return args, months, topos, X_pad, with_pods, _pod_scan_len(traces)
 
 
 def _finalize(out, axes: SweepAxes, months: int, topos, X_pad: int,
@@ -315,7 +340,8 @@ def _finalize(out, axes: SweepAxes, months: int, topos, X_pad: int,
 
 def sweep(axes: SweepAxes, harvest: bool = True, mature_months: int = 12,
           n_halls_max: int = 0,
-          traces: Sequence[Trace] | None = None) -> SweepResult:
+          traces: Sequence[Trace] | None = None,
+          legacy_pod_cond: bool = False) -> SweepResult:
     """Evaluate every configuration in `axes` in one compiled call.
 
     All envelopes must share the same buildout horizon (the scan length).
@@ -333,6 +359,10 @@ def sweep(axes: SweepAxes, harvest: bool = True, mature_months: int = 12,
     rows of the not-yet-open hall picks the same row either way — a
     failed first attempt means no existing-hall row was feasible, so the
     biased argmin lands in the new hall exactly when the retry would.
+    Pod traces compile the split-trace scan: each month's pod events run
+    through the genuine attempt/retry pod path and its cluster events
+    through the biased attempt, so neither pays for the other's branch
+    (see `fleet.simulate_lifecycle`).
 
     Args:
         axes: the configuration batch (see `SweepAxes`).
@@ -341,11 +371,16 @@ def sweep(axes: SweepAxes, harvest: bool = True, mature_months: int = 12,
         n_halls_max: static hall cap; 0 auto-sizes per configuration.
         traces: optional pre-generated per-configuration arrival traces
             (defaults to `generate_fleet_trace(envs[i], seeds[i])`).
+        legacy_pod_cond: compile the pre-split per-event
+            `lax.cond(is_pod, …)` + retry path instead (reference for
+            `pod_sweep_speedup` and the split-equivalence tests; results
+            are identical).
     """
-    args, months, topos, X_pad, with_pods = _prepare(axes, n_halls_max,
-                                                     traces)
+    args, months, topos, X_pad, with_pods, pod_len = _prepare(
+        axes, n_halls_max, traces, legacy_pod_cond)
     out = _sweep_jit(*args, harvest=harvest, mature_months=mature_months,
-                     with_pods=with_pods)
+                     with_pods=with_pods, legacy_pod_cond=legacy_pod_cond,
+                     pod_scan_len=pod_len)
     return _finalize(out, axes, months, topos, X_pad, mature_months)
 
 
@@ -383,8 +418,8 @@ def sharded_sweep(axes: SweepAxes, harvest: bool = True,
         return sweep(axes, harvest=harvest, mature_months=mature_months,
                      n_halls_max=n_halls_max, traces=traces)
 
-    args, months, topos, X_pad, with_pods = _prepare(axes, n_halls_max,
-                                                     traces)
+    args, months, topos, X_pad, with_pods, pod_len = _prepare(
+        axes, n_halls_max, traces)
     B, D = len(axes), len(devs)
     B_pad = -(-B // D) * D
     if B_pad != B:
@@ -397,7 +432,8 @@ def sharded_sweep(axes: SweepAxes, harvest: bool = True,
     args = jax.device_put(args, NamedSharding(mesh, shax.config_spec()))
     out = _sharded_sweep_jit(*args, harvest=harvest,
                              mature_months=mature_months,
-                             with_pods=with_pods, mesh=mesh)
+                             with_pods=with_pods, pod_scan_len=pod_len,
+                             mesh=mesh)
     if B_pad != B:
         out = jax.tree.map(lambda x: x[:B], out)
     return _finalize(out, axes, months, topos, X_pad, mature_months)

@@ -1,0 +1,62 @@
+"""Assert benchmark speedup ratios from a --json dump are >= a floor.
+
+Usage:  python tools/check_speedups.py BENCH_mc.json [BENCH_sweep.json ...]
+
+Scans every row whose name contains "speedup" for a `<key>=<ratio>x`
+pair in its derived field and fails (exit 1) if any ratio is below the
+floor (default 1.0 — batched/split paths must never be slower than the
+sequential/legacy reference; override with --min).  Rows whose derived
+field says `skipped=` (e.g. the sharded probe on a 1-device host) are
+ignored.  At least one ratio must be found, so an empty or mis-filtered
+dump also fails.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+
+def check(paths, floor: float) -> int:
+    found, failed = 0, []
+    for path in paths:
+        with open(path) as f:
+            rows = json.load(f)
+        for name, row in sorted(rows.items()):
+            if "speedup" not in name:
+                continue
+            derived = row.get("derived", "")
+            if "skipped=" in derived:
+                print(f"{name}: skipped ({derived})")
+                continue
+            m = re.search(r"=([0-9.]+)x", derived)
+            if not m:
+                failed.append(f"{name}: no '<ratio>x' in {derived!r}")
+                continue
+            found += 1
+            ratio = float(m.group(1))
+            ok = ratio >= floor
+            print(f"{name}: {ratio:.2f}x "
+                  f"({'ok' if ok else f'BELOW floor {floor}'})")
+            if not ok:
+                failed.append(f"{name}: {ratio:.2f}x < {floor}")
+    if not found:
+        failed.append("no speedup ratios found in "
+                      + ", ".join(paths))
+    for msg in failed:
+        print(f"FAIL {msg}", file=sys.stderr)
+    return 1 if failed else 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("json", nargs="+", help="--json dumps to check")
+    ap.add_argument("--min", type=float, default=1.0,
+                    help="minimum acceptable speedup ratio (default 1.0)")
+    args = ap.parse_args(argv)
+    return check(args.json, args.min)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
