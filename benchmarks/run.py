@@ -617,6 +617,55 @@ def pod_sweep_speedup():
 
 
 @bench
+def mc_pod_speedup():
+    """Acceptance (ISSUE 5): single-hall pod grids through the split-pods
+    fast path (pods-first trace windows + HD-compacted row scan) vs the
+    legacy per-event `lax.cond(is_pod, …)` path
+    (`mc_sweep(..., legacy_pod_cond=True)`) — identical pods-first traces
+    either way, so the two paths are exactly equivalent (max deviation
+    must be 0).  The grid covers `pod_racks ∈ {3, 5, 7}` (each pod size
+    is its own `mc_sweep` call: the pod quantum is a trace-stream
+    parameter), 2 designs × 2 seeds per pod size; a warm-up seed
+    compiles both paths first so the timed legs measure execution."""
+    from repro.core.mc_sweep import MCAxes, mc_sweep
+
+    pods = (3, 5, 7)
+    designs = [hierarchy.get_design(d) for d in ("10N/8", "8+2")]
+    kw = dict(n_trials=4, n_events=240, year=2030, scenario=proj.HIGH)
+    axes = MCAxes.product(designs=designs, seeds=(51, 52))
+
+    t_split = t_legacy = 0.0
+    dev, n_cfg = 0.0, 0
+    for p in pods:
+        # first pair compiles both paths at the exact grid shape and
+        # window statics; the timed reps (min of 2, interleaved — 1-core
+        # wall times are noisy) then measure execution + staging only
+        rs = mc_sweep(axes, pod_racks=p, **kw)
+        rl = mc_sweep(axes, pod_racks=p, legacy_pod_cond=True, **kw)
+        dev = max(dev, float(np.abs(rs.deployed_kw - rl.deployed_kw).max()),
+                  float(np.abs(rs.lineup_stranding
+                               - rl.lineup_stranding).max()))
+
+        def timed(**mode):
+            t0 = time.time()
+            mc_sweep(axes, pod_racks=p, **mode, **kw)
+            return time.time() - t0
+
+        reps = [(timed(), timed(legacy_pod_cond=True)) for _ in range(2)]
+        t_split += min(r[0] for r in reps)
+        t_legacy += min(r[1] for r in reps)
+        n_cfg += len(axes)
+    emit("mc_pod.split", t_split / n_cfg * 1e6,
+         f"n_cfg={n_cfg};pods={'/'.join(map(str, pods))};"
+         f"wall_s={t_split:.2f}")
+    emit("mc_pod.legacy_cond", t_legacy / n_cfg * 1e6,
+         f"wall_s={t_legacy:.2f}")
+    emit("mc_pod.speedup", 0,
+         f"legacy_over_split={t_legacy / t_split:.2f}x;"
+         f"max_dev={dev:.2e}")
+
+
+@bench
 def scenario_sweep():
     """Beyond-the-paper scenario frontier (docs/scenarios.md): baseline +
     all four scenario families (demand shocks, correlated cohorts,

@@ -359,6 +359,20 @@ class TraceBatch:
         return Trace(**{f: getattr(self, f)[i]
                         for f in Trace.__dataclass_fields__})
 
+    @property
+    def n_pods(self) -> np.ndarray:
+        """Per-trial pod-event count [T].  `sample_mixed_traces` emits
+        pods first within every trial, so trial `t`'s pod events are
+        exactly indices ``[0, n_pods[t])`` — the split-trace contract."""
+        return self.is_pod.sum(axis=1).astype(np.int32)
+
+    @property
+    def max_pod_racks(self) -> int:
+        """The batch's true largest pod size in racks (1 if pod-free) —
+        the static rack-scan length the split-pods path needs."""
+        pods = np.asarray(self.is_pod)
+        return int(np.asarray(self.n_racks)[pods].max()) if pods.any() else 1
+
 
 def sample_mixed_traces(n_trials: int, n_events: int, year: int = 2028,
                         scenario: str = proj.MED, seed: int = 0,
@@ -366,7 +380,8 @@ def sample_mixed_traces(n_trials: int, n_events: int, year: int = 2028,
                         pod_racks: int = 1, quantum_racks: int = 10,
                         la_fraction: float = 0.0,
                         sku_kw_override: float | None = None,
-                        single_sku_gpu: bool = False) -> TraceBatch:
+                        single_sku_gpu: bool = False,
+                        phase: int = 0) -> TraceBatch:
     """Batched `sample_mixed_trace`: `n_trials` steady-state traces in ONE
     vectorized numpy RNG pass (no per-trial / per-event Python loop).
 
@@ -374,7 +389,7 @@ def sample_mixed_traces(n_trials: int, n_events: int, year: int = 2028,
     consumes this directly; host-side trace synthesis used to dominate its
     wall time at small `n_events`.  Semantics match `sample_mixed_trace`
     (class mix calibrated from mean event power, SKU clusters per Eq. 3,
-    N(μ,σ) lifetimes, LA tiers with probability `la_fraction`) with two
+    N(μ,σ) lifetimes, LA tiers with probability `la_fraction`) with three
     deliberate differences:
 
     * the RNG is one `np.random.default_rng([seed, trial-batch salt])`
@@ -385,9 +400,22 @@ def sample_mixed_traces(n_trials: int, n_events: int, year: int = 2028,
     * the Fig. 6 single-SKU mode is a *generator argument*
       (`single_sku_gpu` + `sku_kw_override`) instead of post-hoc in-place
       mutation: `single_sku_gpu=True` emits only GPU-class events, and
-      `sku_kw_override` replaces every GPU rack power.
+      `sku_kw_override` replaces every GPU rack power;
+    * with `pod_racks > 1` every trial's events are reordered **pods
+      first** (stable, so relative order within pods and within clusters
+      is preserved) — the same per-window contract the fleet trace keeps
+      per month, which lets the split-pods scan run a pod window then a
+      cluster window without reordering anything at placement time.
+      `TraceBatch.n_pods` / `max_pod_racks` expose the window geometry.
+
+    `phase` salts an independent stream per (seed, phase) pair — the MC
+    engine draws fill traces at phase 0 and refill traces at phase 1, so
+    a configuration seeded `s` never shares a stream with configuration
+    `s+1` (phase 0 keeps the historical `[seed, salt]` stream).
     """
-    rng = np.random.default_rng([seed, 0x6D63])         # 'mc' trial salt
+    salt = ([int(seed), 0x6D63] if phase == 0
+            else [int(seed), int(phase), 0x6D63])      # 'mc' trial salt
+    rng = np.random.default_rng(salt)
     T, E = int(n_trials), int(n_events)
     gpu_n = pod_racks if pod_racks > 1 else 1
     gpu_kw = proj.gpu_rack_kw(year, scenario, pod_scale=pod_racks > 1)
@@ -434,6 +462,17 @@ def sample_mixed_traces(n_trials: int, n_events: int, year: int = 2028,
     mu = np.array([LIFETIME[c][0] for c in range(3)])[cid]
     sd = np.array([LIFETIME[c][1] for c in range(3)])[cid]
     lifetime_m = np.maximum(12, np.round(rng.normal(mu, sd) * 12.0))
+
+    if pod_racks > 1:
+        # pods-first per trial (stable — in-group order preserved): the
+        # split-trace contract; a pure reorder, so per-event marginals
+        # and the realized power mix are untouched
+        order = np.argsort(~is_gpu, axis=1, kind="stable")
+        take = lambda a: np.take_along_axis(a, order, axis=1)
+        cid, rack_kw, tier, lifetime_m = map(
+            take, (cid, rack_kw, tier, lifetime_m))
+        is_gpu = cid == CLASS_GPU
+
     return TraceBatch(
         month=np.zeros((T, E), np.int32),
         class_id=cid,

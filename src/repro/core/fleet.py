@@ -244,7 +244,8 @@ def simulate_lifecycle(jt: JaxTopology, ft: FleetTrace, idx, valid,
                        harvest: bool, mature_months: int,
                        with_pods: bool = True,
                        legacy_pod_cond: bool = False,
-                       pod_scan_len: int = MAX_POD_RACKS) -> SimOutputs:
+                       pod_scan_len: int = MAX_POD_RACKS,
+                       hd_scan: int | None = None) -> SimOutputs:
     """Run the full monthly lifecycle as a single `lax.scan`.
 
     All positional arguments are device-typed (vmap-able); `harvest`,
@@ -274,7 +275,10 @@ def simulate_lifecycle(jt: JaxTopology, ft: FleetTrace, idx, valid,
       interleaved order via the per-month pod-count offset.
       `pod_scan_len` (static, ≥ the largest pod's `n_racks`) trims the
       rack scan to the batch's real max pod size instead of the
-      `MAX_POD_RACKS` bound.
+      `MAX_POD_RACKS` bound, and `hd_scan` (static, ≥ the batch's
+      HD-row count) restricts each pod rack's row search to the
+      compacted HD view `jt.hd_index[:hd_scan]` — GPU pods are HD-only,
+      so the trim is bitwise inert (see `placement._place_pod`).
     * `legacy_pod_cond=True` (benchmark/regression reference): the
       pre-split behavior — `idx`/`valid` window ALL events and each one
       runs `placement.place`'s `lax.cond(is_pod, …)` plus the retry
@@ -315,12 +319,13 @@ def simulate_lifecycle(jt: JaxTopology, ft: FleetTrace, idx, valid,
         domain the full pod cannot share)."""
         st1, ok1, rows1, counts1 = pl._place_pod(jt, st, dep, policy, k,
                                                  jt.row_hall < n_act,
-                                                 max_racks=pod_scan_len)
+                                                 max_racks=pod_scan_len,
+                                                 hd_scan=hd_scan)
 
         def retry():
             st2, ok2, rows2, counts2 = pl._place_pod(
                 jt, st, dep, policy, k, jt.row_hall < n_try,
-                max_racks=pod_scan_len)
+                max_racks=pod_scan_len, hd_scan=hd_scan)
             return st2, ok2, rows2, counts2, n_try
 
         return jax.lax.cond(
@@ -444,16 +449,18 @@ def simulate_lifecycle(jt: JaxTopology, ft: FleetTrace, idx, valid,
 
 @functools.partial(jax.jit,
                    static_argnames=("harvest", "mature_months", "with_pods",
-                                    "legacy_pod_cond", "pod_scan_len"))
+                                    "legacy_pod_cond", "pod_scan_len",
+                                    "hd_scan"))
 def _simulate_jit(jt, ft, idx, valid, idx_pod, valid_pod, policy, seed,
                   h_cap, n_real, harvest, mature_months, with_pods,
-                  legacy_pod_cond=False, pod_scan_len=MAX_POD_RACKS):
+                  legacy_pod_cond=False, pod_scan_len=MAX_POD_RACKS,
+                  hd_scan=None):
     return simulate_lifecycle(jt, ft, idx, valid, idx_pod, valid_pod,
                               policy, seed, h_cap, n_real, harvest=harvest,
                               mature_months=mature_months,
                               with_pods=with_pods,
                               legacy_pod_cond=legacy_pod_cond,
-                              pod_scan_len=pod_scan_len)
+                              pod_scan_len=pod_scan_len, hd_scan=hd_scan)
 
 
 def make_fleet_result(out, months: int, lineups_per_hall: int,
@@ -525,6 +532,7 @@ def run_fleet(cfg: FleetConfig, trace: Trace | None = None) -> FleetResult:
                         harvest=cfg.harvest,
                         mature_months=cfg.mature_months,
                         with_pods=with_pods,
-                        pod_scan_len=_pod_scan_len([trace]))
+                        pod_scan_len=_pod_scan_len([trace]),
+                        hd_scan=topo.n_hd_rows)
     return make_fleet_result(out, months, topo.lineups_per_hall,
                              topo.lineup_is_active, design, env)

@@ -98,6 +98,7 @@ class HallTopology:
     row_hall: np.ndarray       # [R_tot] int32
     lineup_cap: np.ndarray     # [X_tot] float32 (kW rating C)
     lineup_is_active: np.ndarray  # [X_tot] bool (block reserve = False)
+    lineup_hall: np.ndarray    # [X_tot] int32 — hall owning each line-up
     hall_liq_cap: np.ndarray   # [H] float32
     ha_frac: float
     is_block: bool
@@ -110,6 +111,11 @@ class HallTopology:
     @property
     def lineups_per_hall(self) -> int:
         return self.lineup_cap.shape[0] // self.n_halls
+
+    @property
+    def n_hd_rows(self) -> int:
+        """HD-row count across all halls (the compacted pod-scan length)."""
+        return int(np.asarray(self.row_is_hd).sum())
 
     def ha_capacity_kw(self) -> float:
         return self.design.ha_capacity_kw * self.n_halls
@@ -219,6 +225,7 @@ def build_topology(design: DesignSpec, n_halls: int = 1,
             [np.full((R,), h, np.int32) for h in range(H)], 0),
         lineup_cap=np.concatenate([lineup_cap] * H, 0),
         lineup_is_active=np.concatenate([lineup_is_active] * H, 0),
+        lineup_hall=np.repeat(np.arange(H, dtype=np.int32), X),
         hall_liq_cap=np.full((H,), d.hall_liq_cap_lpm, np.float32),
         ha_frac=d.ha_frac,
         is_block=(d.kind == "block"),

@@ -96,11 +96,20 @@ class MCAxes:
     def product(designs: Sequence[DesignSpec],
                 sku_kw: Sequence[Optional[float]] = (None,),
                 policies: Sequence[int] = (DEFAULT_POLICY,),
-                seeds: Sequence[int] = (0,)) -> "MCAxes":
-        """Full grid, designs-major ordering (seeds vary fastest)."""
-        combos = list(itertools.product(designs, sku_kw, policies, seeds))
-        return MCAxes([c[0] for c in combos], [c[1] for c in combos],
-                      [c[2] for c in combos], [c[3] for c in combos])
+                seeds: Sequence[int] = (0,),
+                tags: Sequence[str] | None = None) -> "MCAxes":
+        """Full grid, designs-major ordering (seeds vary fastest).
+
+        `tags` (aligned with `designs`, length-1 broadcasts) labels each
+        design and follows it through the cross product — the `MCAxes`
+        analogue of `SweepAxes.product(env_tags=…)`."""
+        tags = _broadcast(tags, len(designs), "tags") \
+            if tags is not None else [""] * len(designs)
+        combos = list(itertools.product(zip(designs, tags), sku_kw,
+                                        policies, seeds))
+        return MCAxes([c[0][0] for c in combos], [c[1] for c in combos],
+                      [c[2] for c in combos], [c[3] for c in combos],
+                      [c[0][1] for c in combos])
 
 
 @dataclass
@@ -160,31 +169,46 @@ def _staged_topology(design: DesignSpec, rows_per_hall: int,
     return _TOPO_CACHE[key]
 
 
-def _mc_trial(jt_c, pol, t_a, t_b, k, *, harvest, with_pods):
+def _mc_trial(jt_c, pol, t_a, t_b, k, *, harvest, with_pods, **statics):
     """One trial's device outputs.  The empty initial state is built
     inside the trace (`init_state_from`), so every operand carries the
-    batch axes."""
+    batch axes.  `statics` forwards the split-pods placement-mode
+    keywords (`split_pods`, `pod_windows`, `cluster_starts`,
+    `pod_scan_len`, `hd_scan`) to `run_trial`."""
     state, res_a, res_b = run_trial(jt_c, pl.init_state_from(jt_c),
-                                    t_a, t_b, pol, k, harvest, with_pods)
+                                    t_a, t_b, pol, k, harvest, with_pods,
+                                    **statics)
     return (pl.lineup_stranding(jt_c, state),
             pl.hall_stranding(jt_c, state)[0],
             pl.deployed_kw(state),
             res_b.saturated, res_a.placed, res_b.placed)
 
 
-@functools.partial(jax.jit, static_argnames=("harvest", "with_pods"))
-def _mc_sweep_jit(jt, ta, tb, keys, policy, harvest, with_pods):
+_MC_STATICS = ("harvest", "with_pods", "split_pods", "pod_windows",
+               "cluster_starts", "pod_scan_len", "hd_scan")
+
+
+@functools.partial(jax.jit, static_argnames=_MC_STATICS)
+def _mc_sweep_jit(jt, ta, tb, keys, policy, harvest, with_pods,
+                  split_pods=False, pod_windows=(0, 0),
+                  cluster_starts=(0, 0), pod_scan_len=pl.MAX_POD_RACKS,
+                  hd_scan=None):
     """vmap `_mc_trial` over (configuration × trial): [B] topology /
     policy axes outer, [B, T] trace/key axes inner."""
-    trial = functools.partial(_mc_trial, harvest=harvest,
-                              with_pods=with_pods)
+    trial = functools.partial(
+        _mc_trial, harvest=harvest, with_pods=with_pods,
+        split_pods=split_pods, pod_windows=pod_windows,
+        cluster_starts=cluster_starts, pod_scan_len=pod_scan_len,
+        hd_scan=hd_scan)
     per_cfg = jax.vmap(trial, in_axes=(None, None, 0, 0, 0))
     return jax.vmap(per_cfg)(jt, policy, ta, tb, keys)
 
 
-@functools.partial(jax.jit, static_argnames=("harvest", "with_pods",
-                                             "mesh"))
-def _mc_sharded_jit(jt, ta, tb, keys, policy, harvest, with_pods, mesh):
+@functools.partial(jax.jit, static_argnames=_MC_STATICS + ("mesh",))
+def _mc_sharded_jit(jt, ta, tb, keys, policy, mesh, harvest, with_pods,
+                    split_pods=False, pod_windows=(0, 0),
+                    cluster_starts=(0, 0), pod_scan_len=pl.MAX_POD_RACKS,
+                    hd_scan=None):
     """Sharded trial batch: operands arrive FLATTENED to one [B·T]
     (config × trial) axis — `sharded_mc_sweep` repeats the per-config
     topology/policy per trial — which a single `vmap` consumes under
@@ -194,19 +218,47 @@ def _mc_sharded_jit(jt, ta, tb, keys, policy, harvest, with_pods, mesh):
     Trials are independent, so out_specs stay sharded; no collectives."""
     spec = shax.config_spec()
     fn = jax.vmap(lambda jt_c, t_a, t_b, k, pol: _mc_trial(
-        jt_c, pol, t_a, t_b, k, harvest=harvest, with_pods=with_pods))
+        jt_c, pol, t_a, t_b, k, harvest=harvest, with_pods=with_pods,
+        split_pods=split_pods, pod_windows=pod_windows,
+        cluster_starts=cluster_starts, pod_scan_len=pod_scan_len,
+        hd_scan=hd_scan))
     sharded = shax.shard_map(fn, mesh=mesh, in_specs=(spec,) * 5,
                              out_specs=spec, check_vma=False)
     return sharded(jt, ta, tb, keys, policy)
 
 
+def _pod_geometry(batches) -> Tuple[int, int]:
+    """(max, min) per-trial pod count over a list of `TraceBatch`es — the
+    static pod-window length and cluster-window start the split-pods
+    scan compiles.  Also validates the pods-first contract (mirroring
+    `fleet._event_windows`)."""
+    counts = np.concatenate([b.n_pods.ravel() for b in batches])
+    for b in batches:
+        ip = np.asarray(b.is_pod)
+        if np.any(ip[:, 1:] & ~ip[:, :-1]):
+            raise ValueError(
+                "split-pods scan needs pod events to precede cluster "
+                "events within each trial (the generated-trace order); "
+                "use legacy_pod_cond=True for unordered traces")
+    return int(counts.max()), int(counts.min())
+
+
 def _mc_prepare(axes: MCAxes, n_trials: int, n_events: int, year: int,
                 scenario: str, gpu_power_share: float, pod_racks: int,
                 quantum_racks: int, la_fraction: float,
-                single_sku_gpu: bool, refill_events: int | None):
+                single_sku_gpu: bool, refill_events: int | None,
+                legacy_pod_cond: bool = False):
     """Host-side staging shared by `mc_sweep` and `sharded_mc_sweep`:
     padded/stacked topologies ([B] leading axis), batched fill + refill
-    trial traces ([B, T, E]), per-trial PRNG keys, per-config policies."""
+    trial traces ([B, T, E]), per-trial PRNG keys, per-config policies,
+    plus the static placement-mode keywords for the jitted trial
+    (`with_pods` / `split_pods` windows / `pod_scan_len` / `hd_scan`).
+
+    Refill traces draw from the phase-1 stream of the *same* seed
+    (`sample_mixed_traces(phase=1)`); the historical `seed + 1` refill
+    made a configuration seeded `s` share its refill trace bitwise with
+    configuration `s+1`'s fill trace — correlated trials across
+    adjacent-seed grid points."""
     B = len(axes)
     if B == 0:
         raise ValueError("empty MC sweep")
@@ -226,14 +278,30 @@ def _mc_prepare(axes: MCAxes, n_trials: int, n_events: int, year: int,
         lambda *xs: jnp.stack(xs), *[TraceArrays.from_trace(t) for t in ts])
     tas = [gen(n_trials, n_events, seed=s, sku_kw_override=kw)
            for s, kw in zip(axes.seeds, axes.sku_kw)]
-    tbs = [gen(n_trials, E_b, seed=s + 1, sku_kw_override=kw)
+    tbs = [gen(n_trials, E_b, seed=s, phase=1, sku_kw_override=kw)
            for s, kw in zip(axes.seeds, axes.sku_kw)]
     with_pods = any(bool(t.is_pod.any()) for t in tas + tbs)
+    statics = dict(with_pods=with_pods)
+    if with_pods and not legacy_pod_cond:
+        # windows bucket to 4 (pod window up, cluster start down) so
+        # same-shape grids over fresh seeds reuse the compiled executable
+        # despite per-seed pod-count jitter; the cost is at most 3 dead
+        # scan steps per window
+        wa, sa = _pod_geometry(tas)
+        wb, sb = _pod_geometry(tbs)
+        bucket = lambda n, E: min(-(-n // 4) * 4, E)
+        statics.update(
+            split_pods=True,
+            pod_windows=(bucket(wa, n_events), bucket(wb, E_b)),
+            cluster_starts=(sa // 4 * 4, sb // 4 * 4),
+            pod_scan_len=min(max(t.max_pod_racks for t in tas + tbs),
+                             pl.MAX_POD_RACKS),
+            hd_scan=max(s[0].n_hd_rows for s in staged))
     ta, tb = stack(tas), stack(tbs)
     keys = jnp.stack([jax.random.split(jax.random.PRNGKey(s), n_trials)
                       for s in axes.seeds])
     policy = jnp.asarray(axes.policies, jnp.int32)
-    return (jt, ta, tb, keys, policy), with_pods
+    return (jt, ta, tb, keys, policy), statics
 
 
 def _mc_finalize(out, axes: MCAxes) -> MCResult:
@@ -255,17 +323,28 @@ def mc_sweep(axes: MCAxes, n_trials: int = 32, n_events: int = 600,
              gpu_power_share: float = 0.6, pod_racks: int = 1,
              quantum_racks: int = 10, la_fraction: float = 0.0,
              harvest: bool = True, single_sku_gpu: bool = False,
-             refill_events: int | None = None) -> MCResult:
+             refill_events: int | None = None,
+             legacy_pod_cond: bool = False) -> MCResult:
     """Evaluate every single-hall MC configuration in `axes` in one
     compiled call (`n_trials` trials each).
 
     Trial traces come from `arrivals.sample_mixed_traces` — one
     vectorized numpy pass per configuration phase, seeded by the
-    configuration's `seed` (fill) and `seed + 1` (refill) — and
+    configuration's `seed` at phase 0 (fill) and phase 1 (refill) — and
     `singlehall.run_trial` is vmapped over the (config × trial) grid.
     Topologies are padded to the batch's common (rows, line-ups) shape;
     padding rows have zero capacity and padded line-ups are inactive, so
     real-row results are unchanged and `result(i)` strips the padding.
+
+    Pod traces (`pod_racks > 1`) compile the split-pods fast path: the
+    generator emits pods first within every trial, so each phase runs a
+    pod window (`placement._place_pod` over the HD-compacted row view,
+    rack scan trimmed to the batch's true max pod size) then a cluster
+    window (`place_cluster_in_row`), instead of paying `place`'s
+    `lax.cond(is_pod, …)` both-branches cost on every event under vmap.
+    Results are bit-identical to `legacy_pod_cond=True`, which keeps the
+    per-event cond path compilable as the regression/benchmark
+    reference (`benchmarks/run.py --only mc_pod_speedup`).
 
     Args:
         axes: the configuration batch (see `MCAxes`).
@@ -278,12 +357,15 @@ def mc_sweep(axes: MCAxes, n_trials: int = 32, n_events: int = 600,
             configuration's `sku_kw` override.
         refill_events: refill-phase event count (default
             ``max(200, n_events // 3)``, matching `monte_carlo`).
+        legacy_pod_cond: compile the pre-split per-event
+            `lax.cond(is_pod, …)` path instead (results identical).
     """
-    args, with_pods = _mc_prepare(axes, n_trials, n_events, year, scenario,
-                                  gpu_power_share, pod_racks,
-                                  quantum_racks, la_fraction,
-                                  single_sku_gpu, refill_events)
-    out = _mc_sweep_jit(*args, harvest=harvest, with_pods=with_pods)
+    args, statics = _mc_prepare(axes, n_trials, n_events, year, scenario,
+                                gpu_power_share, pod_racks,
+                                quantum_racks, la_fraction,
+                                single_sku_gpu, refill_events,
+                                legacy_pod_cond)
+    out = _mc_sweep_jit(*args, harvest=harvest, **statics)
     return _mc_finalize(out, axes)
 
 
@@ -293,6 +375,7 @@ def sharded_mc_sweep(axes: MCAxes, n_trials: int = 32, n_events: int = 600,
                      quantum_racks: int = 10, la_fraction: float = 0.0,
                      harvest: bool = True, single_sku_gpu: bool = False,
                      refill_events: int | None = None,
+                     legacy_pod_cond: bool = False,
                      devices: Sequence[jax.Device] | None = None
                      ) -> MCResult:
     """`mc_sweep`, with the (config × trial) batch sharded over devices.
@@ -313,16 +396,17 @@ def sharded_mc_sweep(axes: MCAxes, n_trials: int = 32, n_events: int = 600,
               scenario=scenario, gpu_power_share=gpu_power_share,
               pod_racks=pod_racks, quantum_racks=quantum_racks,
               la_fraction=la_fraction, harvest=harvest,
-              single_sku_gpu=single_sku_gpu, refill_events=refill_events)
+              single_sku_gpu=single_sku_gpu, refill_events=refill_events,
+              legacy_pod_cond=legacy_pod_cond)
     devs = list(devices) if devices is not None else list(jax.devices())
     B, T = len(axes), int(n_trials)
     if len(devs) <= 1 or B * T == 1:
         return mc_sweep(axes, **kw)
 
-    (jt, ta, tb, keys, policy), with_pods = _mc_prepare(
+    (jt, ta, tb, keys, policy), statics = _mc_prepare(
         axes, n_trials, n_events, year, scenario, gpu_power_share,
         pod_racks, quantum_racks, la_fraction, single_sku_gpu,
-        refill_events)
+        refill_events, legacy_pod_cond)
     # flatten (config, trial) → one batch axis; repeat per-config leaves
     jt = jax.tree.map(lambda x: jnp.repeat(x, T, axis=0), jt)
     policy = jnp.repeat(policy, T)
@@ -340,8 +424,7 @@ def sharded_mc_sweep(axes: MCAxes, n_trials: int = 32, n_events: int = 600,
 
     mesh = shax.config_mesh(devs)
     args = jax.device_put(args, NamedSharding(mesh, shax.config_spec()))
-    out = _mc_sharded_jit(*args, harvest=harvest, with_pods=with_pods,
-                          mesh=mesh)
+    out = _mc_sharded_jit(*args, harvest=harvest, mesh=mesh, **statics)
     out = jax.tree.map(
         lambda x: x[:B * T].reshape((B, T) + x.shape[1:]), out)
     return _mc_finalize(out, axes)

@@ -52,14 +52,21 @@ class JaxTopology(NamedTuple):
     row_is_hd: jax.Array    # [R] bool
     row_domain: jax.Array   # [R] int32
     row_hall: jax.Array     # [R] int32
+    hd_index: jax.Array     # [R] int32 — HD row ids first (ascending), then
+                            # the rest; `hd_index[:n_hd]` is the compacted
+                            # HD-row view the pod scans gather over
     lineup_cap: jax.Array   # [X]
     lineup_is_active: jax.Array  # [X] bool
+    lineup_hall: jax.Array  # [X] int32 — hall owning each line-up
     hall_liq_cap: jax.Array  # [H]
     ha_frac: jax.Array      # scalar
     is_block: jax.Array     # scalar bool
 
 
 def jax_topology(topo: HallTopology) -> JaxTopology:
+    # stable: HD rows keep their ascending id order, so a compacted argmin
+    # tie-breaks exactly like the full-row argmin restricted to HD rows
+    hd_index = np.argsort(~np.asarray(topo.row_is_hd), kind="stable")
     return JaxTopology(
         row_cap=jnp.asarray(topo.row_cap),
         row_feeds=jnp.asarray(topo.row_feeds),
@@ -67,8 +74,10 @@ def jax_topology(topo: HallTopology) -> JaxTopology:
         row_is_hd=jnp.asarray(topo.row_is_hd),
         row_domain=jnp.asarray(topo.row_domain),
         row_hall=jnp.asarray(topo.row_hall),
+        hd_index=jnp.asarray(hd_index, jnp.int32),
         lineup_cap=jnp.asarray(topo.lineup_cap),
         lineup_is_active=jnp.asarray(topo.lineup_is_active),
+        lineup_hall=jnp.asarray(topo.lineup_hall, jnp.int32),
         hall_liq_cap=jnp.asarray(topo.hall_liq_cap),
         ha_frac=jnp.asarray(topo.ha_frac, jnp.float32),
         is_block=jnp.asarray(topo.is_block),
@@ -125,28 +134,46 @@ def _tree_where(pred, a, b):
     return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
 
 
-def _gather_feeds(jt: JaxTopology, state: HallState):
-    idx = jt.row_feeds                      # [R, F]
+def _gather_feeds(jt: JaxTopology, state: HallState, row_feeds=None):
+    idx = jt.row_feeds if row_feeds is None else row_feeds   # [R|K, F]
     valid = idx >= 0
     safe = jnp.where(valid, idx, 0)
     return valid, safe, jt.lineup_cap[safe], state.lineup_ha[safe], state.lineup_tot[safe]
 
 
+def _row_view(jt: JaxTopology, state: HallState, rows):
+    """Row-axis arrays, gathered at `rows` when given (compacted view).
+
+    Every consumer computes per-row quantities elementwise, so a gathered
+    view yields bitwise the values the full computation would produce at
+    those rows — the compacted pod scan stays exactly equivalent to the
+    full-row scan restricted to the subset."""
+    if rows is None:
+        return (jt.row_cap, state.row_load, jt.row_feeds, jt.row_nfeeds,
+                jt.row_is_hd, jt.row_hall)
+    return (jt.row_cap[rows], state.row_load[rows], jt.row_feeds[rows],
+            jt.row_nfeeds[rows], jt.row_is_hd[rows], jt.row_hall[rows])
+
+
 def row_feasible(jt: JaxTopology, state: HallState, dep: Deployment,
-                 n_in_row) -> jax.Array:
+                 n_in_row, rows=None) -> jax.Array:
     """Feasibility mask over rows for placing `n_in_row` racks of `dep`'s
-    SKU into a single row (Eq. 26 over the ancestor path)."""
+    SKU into a single row (Eq. 26 over the ancestor path).  With `rows`
+    (int32 row-id subset) the mask covers only those rows — the
+    HD-compacted pod scan's view."""
     n = jnp.asarray(n_in_row, jnp.float32)
     d = rack_demand(dep.rack_kw, dep.is_gpu)          # [N_RES]
     D = n * d
     P = n * dep.rack_kw
+    r_cap, r_load, r_feeds, r_nfeeds, r_is_hd, r_hall = _row_view(
+        jt, state, rows)
 
-    fits_row = jnp.all(state.row_load + D[None, :] <= jt.row_cap + 1e-4, axis=-1)
-    hd_ok = jnp.where(dep.is_gpu, jt.row_is_hd, True)
-    liq_ok = (state.hall_liq + D[LIQ])[jt.row_hall] <= jt.hall_liq_cap[jt.row_hall] + 1e-4
+    fits_row = jnp.all(r_load + D[None, :] <= r_cap + 1e-4, axis=-1)
+    hd_ok = jnp.where(dep.is_gpu, r_is_hd, True)
+    liq_ok = (state.hall_liq + D[LIQ])[r_hall] <= jt.hall_liq_cap[r_hall] + 1e-4
 
-    valid, _, cap, ha_l, tot_l = _gather_feeds(jt, state)
-    nf = jnp.maximum(jt.row_nfeeds, 1).astype(jnp.float32)   # [R]
+    valid, _, cap, ha_l, tot_l = _gather_feeds(jt, state, r_feeds)
+    nf = jnp.maximum(r_nfeeds, 1).astype(jnp.float32)        # [R|K]
     share = P / nf
     # distributed HA: simultaneous failover headroom on every parent (Eq. 1)
     delta = P / jnp.maximum(nf - 1.0, 1.0)
@@ -166,22 +193,28 @@ def row_feasible(jt: JaxTopology, state: HallState, dep: Deployment,
 
 
 def row_scores(jt: JaxTopology, state: HallState, dep: Deployment,
-               n_in_row, policy, key) -> jax.Array:
-    """Per-row placement score (lower is better)."""
+               n_in_row, policy, key, rows=None) -> jax.Array:
+    """Per-row placement score (lower is better).  With `rows`, scores are
+    the full-row scores gathered at the subset (the random draw is taken
+    from the full-`R` grid and the round-robin distance keeps full-`R`
+    row ids), so a compacted argmin matches the full argmin bitwise."""
     n = jnp.asarray(n_in_row, jnp.float32)
     P = n * dep.rack_kw
     R = jt.row_cap.shape[0]
+    r_cap, r_load, r_feeds, r_nfeeds, r_is_hd, _ = _row_view(jt, state, rows)
+    row_ids = jnp.arange(R) if rows is None else rows
 
     # Structural preference: non-GPU racks go to LD rows when possible.
-    base = jnp.where(jt.row_is_hd & ~dep.is_gpu, _LD_PREFERENCE, 0.0)
+    base = jnp.where(r_is_hd & ~dep.is_gpu, _LD_PREFERENCE, 0.0)
 
     rand = jax.random.uniform(key, (R,))
-    rr = jnp.mod(jnp.arange(R) - state.rr_cursor, R).astype(jnp.float32) / R
-    waste = (jt.row_cap[:, POWER] - state.row_load[:, POWER] - P) / \
-        jnp.maximum(jt.row_cap[:, POWER], 1.0)
+    rand = rand if rows is None else rand[rows]
+    rr = jnp.mod(row_ids - state.rr_cursor, R).astype(jnp.float32) / R
+    waste = (r_cap[:, POWER] - r_load[:, POWER] - P) / \
+        jnp.maximum(r_cap[:, POWER], 1.0)
 
-    valid, _, cap, ha_l, tot_l = _gather_feeds(jt, state)
-    nf = jnp.maximum(jt.row_nfeeds, 1).astype(jnp.float32)
+    valid, _, cap, ha_l, tot_l = _gather_feeds(jt, state, r_feeds)
+    nf = jnp.maximum(r_nfeeds, 1).astype(jnp.float32)
     s = (P / nf)[:, None] / jnp.maximum(cap, 1.0)
     lhat = jnp.where(dep.tier == TIER_HA, ha_l, tot_l) / jnp.maximum(cap, 1.0)
     var = jnp.sum(jnp.where(valid, 2.0 * lhat * s + s * s, 0.0), axis=-1)
@@ -213,18 +246,34 @@ def _apply_to_row(jt: JaxTopology, state: HallState, dep: Deployment,
 
 
 def place_in_row(jt: JaxTopology, state: HallState, dep: Deployment,
-                 n_in_row, policy, key, row_active, score_bias=None):
+                 n_in_row, policy, key, row_active, score_bias=None,
+                 row_subset=None):
     """Place `n_in_row` racks into the best feasible active row.
     Returns (state', ok, row).  `score_bias` (per-row, finite, and large
     relative to policy scores) expresses structural preferences among
-    feasible rows — e.g. the fleet engine's keep-to-existing-halls rule."""
-    feas = row_feasible(jt, state, dep, n_in_row) & row_active
-    score = row_scores(jt, state, dep, n_in_row, policy, key)
-    if score_bias is not None:
-        score = score + score_bias
+    feasible rows — e.g. the fleet engine's keep-to-existing-halls rule.
+
+    `row_subset` (int32 row ids) restricts the scan to those rows —
+    feasibility, scores, `row_active` and `score_bias` are gathered at
+    the subset and the winning slot maps back to its full row id.  When
+    the subset provably contains every feasible row (the HD-compacted pod
+    scan: GPU racks are HD-only), the result is bitwise identical to the
+    full scan."""
+    feas = row_feasible(jt, state, dep, n_in_row, rows=row_subset)
+    score = row_scores(jt, state, dep, n_in_row, policy, key,
+                       rows=row_subset)
+    if row_subset is None:
+        feas = feas & row_active
+        if score_bias is not None:
+            score = score + score_bias
+    else:
+        feas = feas & row_active[row_subset]
+        if score_bias is not None:
+            score = score + score_bias[row_subset]
     score = jnp.where(feas, score, _BIG)
-    row = jnp.argmin(score)
-    ok = feas[row]
+    slot = jnp.argmin(score)
+    ok = feas[slot]
+    row = slot if row_subset is None else row_subset[slot]
     new_state = _apply_to_row(jt, state, dep, n_in_row, row)
     return _tree_where(ok, new_state, state), ok, jnp.where(ok, row, -1)
 
@@ -246,21 +295,30 @@ def place_cluster_in_row(jt: JaxTopology, state: HallState,
 
 
 def _place_pod(jt: JaxTopology, state: HallState, dep: Deployment,
-               policy, key, row_active, max_racks: int = MAX_POD_RACKS):
+               policy, key, row_active, max_racks: int = MAX_POD_RACKS,
+               hd_scan: int | None = None):
     """Place a GPU pod rack-by-rack; all racks must land in the same power
     domain (cross-row cables, paper §4.1); atomic commit.
 
     `max_racks` is the static rack-scan length; callers that know the
-    largest pod in their trace (the fleet split-trace scan) pass it to
-    skip dead scan steps — it must be ≥ every pod's `n_racks`.  The
-    returned registry rows/counts are always `[MAX_POD_RACKS]`."""
+    largest pod in their trace (the split-trace scans) pass it to skip
+    dead scan steps — it must be ≥ every pod's `n_racks`.  The returned
+    registry rows/counts are always `[MAX_POD_RACKS]`.
+
+    `hd_scan` (static, ≥ the topology's HD-row count) restricts each
+    rack's row search to the compacted HD view `jt.hd_index[:hd_scan]`:
+    GPU pods are HD-only (`row_feasible`'s `hd_ok`), so skipping LD and
+    padding rows is bitwise identical to the full scan while cutting the
+    per-rack feasibility/score work to the HD share of the hall."""
     state0 = state
+    subset = None if hd_scan is None else jt.hd_index[:hd_scan]
 
     def body(carry, i):
         st, all_ok, dom = carry
         k = jax.random.fold_in(key, i)
         active = row_active & ((dom < 0) | (jt.row_domain == dom))
-        st2, ok, row = place_in_row(jt, st, dep, 1, policy, k, active)
+        st2, ok, row = place_in_row(jt, st, dep, 1, policy, k, active,
+                                    row_subset=subset)
         live = i < dep.n_racks
         st = _tree_where(live, st2, st)
         all_ok = all_ok & (ok | ~live)
@@ -376,13 +434,19 @@ def lineup_stranding(jt: JaxTopology, state: HallState) -> jax.Array:
 
 
 def hall_stranding(jt: JaxTopology, state: HallState) -> jax.Array:
-    """Per-hall unused fraction of effective HA capacity, shape [H]."""
+    """Per-hall unused fraction of effective HA capacity, shape [H].
+
+    Hall membership comes from the topology's real line-up→hall map
+    (`lineup_hall`), not an `arange // (X // H)` guess — the latter
+    silently mis-bins line-ups whenever the line-up count is not an
+    exact per-hall tiling.  In-repo `build_topology` grids always tile
+    evenly, so this hardens hand-built / custom topologies (uneven hall
+    sizes) rather than changing any pipeline result."""
     eff = jt.ha_frac * jt.lineup_cap * jt.lineup_is_active
     H = jt.hall_liq_cap.shape[0]
-    hall_of_lineup = jnp.arange(eff.shape[0]) // (eff.shape[0] // H)
-    eff_h = jax.ops.segment_sum(eff, hall_of_lineup, H)
+    eff_h = jax.ops.segment_sum(eff, jt.lineup_hall, H)
     load_h = jax.ops.segment_sum(state.lineup_ha * jt.lineup_is_active,
-                                 hall_of_lineup, H)
+                                 jt.lineup_hall, H)
     return jnp.clip((eff_h - load_h) / jnp.maximum(eff_h, 1.0), 0.0, 1.0)
 
 

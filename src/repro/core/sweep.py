@@ -187,30 +187,32 @@ class SweepResult:
 
 @functools.partial(jax.jit,
                    static_argnames=("harvest", "mature_months", "with_pods",
-                                    "legacy_pod_cond", "pod_scan_len"))
+                                    "legacy_pod_cond", "pod_scan_len",
+                                    "hd_scan"))
 def _sweep_jit(jt, ft, idx, valid, idx_pod, valid_pod, policy, seed, h_cap,
                n_real, harvest, mature_months, with_pods,
-               legacy_pod_cond=False, pod_scan_len=MAX_POD_RACKS):
+               legacy_pod_cond=False, pod_scan_len=MAX_POD_RACKS,
+               hd_scan=None):
     fn = functools.partial(simulate_lifecycle, harvest=harvest,
                            mature_months=mature_months, with_pods=with_pods,
                            legacy_pod_cond=legacy_pod_cond,
-                           pod_scan_len=pod_scan_len)
+                           pod_scan_len=pod_scan_len, hd_scan=hd_scan)
     return jax.vmap(fn)(jt, ft, idx, valid, idx_pod, valid_pod, policy,
                         seed, h_cap, n_real)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("harvest", "mature_months", "with_pods",
-                                    "pod_scan_len", "mesh"))
+                                    "pod_scan_len", "hd_scan", "mesh"))
 def _sharded_sweep_jit(jt, ft, idx, valid, idx_pod, valid_pod, policy, seed,
                        h_cap, n_real, harvest, mature_months, with_pods,
-                       pod_scan_len, mesh):
+                       pod_scan_len, hd_scan, mesh):
     """`_sweep_jit` with the configuration axis split over `mesh`: each
     device vmaps only its own B/D slab.  No collectives — configurations
     are independent — so out_specs keep everything config-sharded."""
     fn = functools.partial(simulate_lifecycle, harvest=harvest,
                            mature_months=mature_months, with_pods=with_pods,
-                           pod_scan_len=pod_scan_len)
+                           pod_scan_len=pod_scan_len, hd_scan=hd_scan)
     spec = shax.config_spec()
     sharded = shax.shard_map(jax.vmap(fn), mesh=mesh,
                              in_specs=(spec,) * 10, out_specs=spec,
@@ -238,11 +240,13 @@ def _prepare(axes: SweepAxes, n_halls_max: int,
       count bucketed to 2 (pod scan steps are ~8× a cluster step, so
       the pod window is padded more tightly).
 
-    Returns `(args, months, topos, X_pad, with_pods)` where `args` is the
-    10-tuple of stacked device inputs for `simulate_lifecycle` (leading
-    axis = configuration) and `topos` the per-configuration padded host
-    topologies.  `legacy_pod_cond=True` windows all events together for
-    the pre-split reference path (see `simulate_lifecycle`).
+    Returns `(args, months, topos, X_pad, with_pods, pod_scan_len,
+    hd_scan)` where `args` is the 10-tuple of stacked device inputs for
+    `simulate_lifecycle` (leading axis = configuration), `topos` the
+    per-configuration padded host topologies, and the trailing statics
+    trim the pod rack scan / compacted HD row view.
+    `legacy_pod_cond=True` windows all events together for the
+    pre-split reference path (see `simulate_lifecycle`).
     """
     B = len(axes)
     if B == 0:
@@ -301,7 +305,9 @@ def _prepare(axes: SweepAxes, n_halls_max: int,
             jnp.asarray(axes.seeds, jnp.int32),
             jnp.asarray(h_caps, jnp.int32),
             jnp.asarray([len(t) for t in traces], jnp.int32))
-    return args, months, topos, X_pad, with_pods, _pod_scan_len(traces)
+    hd_scan = max(t.n_hd_rows for t in topos)
+    return args, months, topos, X_pad, with_pods, _pod_scan_len(traces), \
+        hd_scan
 
 
 def _finalize(out, axes: SweepAxes, months: int, topos, X_pad: int,
@@ -376,11 +382,11 @@ def sweep(axes: SweepAxes, harvest: bool = True, mature_months: int = 12,
             `pod_sweep_speedup` and the split-equivalence tests; results
             are identical).
     """
-    args, months, topos, X_pad, with_pods, pod_len = _prepare(
+    args, months, topos, X_pad, with_pods, pod_len, hd_scan = _prepare(
         axes, n_halls_max, traces, legacy_pod_cond)
     out = _sweep_jit(*args, harvest=harvest, mature_months=mature_months,
                      with_pods=with_pods, legacy_pod_cond=legacy_pod_cond,
-                     pod_scan_len=pod_len)
+                     pod_scan_len=pod_len, hd_scan=hd_scan)
     return _finalize(out, axes, months, topos, X_pad, mature_months)
 
 
@@ -418,7 +424,7 @@ def sharded_sweep(axes: SweepAxes, harvest: bool = True,
         return sweep(axes, harvest=harvest, mature_months=mature_months,
                      n_halls_max=n_halls_max, traces=traces)
 
-    args, months, topos, X_pad, with_pods, pod_len = _prepare(
+    args, months, topos, X_pad, with_pods, pod_len, hd_scan = _prepare(
         axes, n_halls_max, traces)
     B, D = len(axes), len(devs)
     B_pad = -(-B // D) * D
@@ -433,7 +439,7 @@ def sharded_sweep(axes: SweepAxes, harvest: bool = True,
     out = _sharded_sweep_jit(*args, harvest=harvest,
                              mature_months=mature_months,
                              with_pods=with_pods, pod_scan_len=pod_len,
-                             mesh=mesh)
+                             hd_scan=hd_scan, mesh=mesh)
     if B_pad != B:
         out = jax.tree.map(lambda x: x[:B], out)
     return _finalize(out, axes, months, topos, X_pad, mature_months)

@@ -134,6 +134,79 @@ def test_monte_carlo_topology_cache():
     assert e1 is e2 and key in _TOPO_CACHE
 
 
+def test_mc_axes_product_tags():
+    """`product` carries `tags` (aligned with designs, like
+    `SweepAxes.product(env_tags=…)`) instead of dropping them."""
+    axes = MCAxes.product(designs=[h.get_design("4N/3"),
+                                   h.get_design("3+1")],
+                          sku_kw=(400.0, 900.0), seeds=(1, 2),
+                          tags=("dist", "block"))
+    assert axes.tags == ["dist"] * 4 + ["block"] * 4
+    assert MCAxes.product(designs=[h.get_design("4N/3")],
+                          seeds=(1, 2)).tags == ["", ""]
+    with pytest.raises(ValueError):
+        MCAxes.product(designs=[h.get_design("4N/3")], tags=("a", "b"))
+
+
+# ---------------------------------------------------------------------------
+# single-hall split-pods fast path ≡ legacy per-event cond
+# ---------------------------------------------------------------------------
+
+def test_sample_mixed_traces_pods_first():
+    """With `pod_racks > 1` every trial's pod events precede its cluster
+    events (stable reorder: in-group order, marginals and the realized
+    power mix are untouched) and the batch exposes its window geometry."""
+    t = sample_mixed_traces(4, 200, seed=9, pod_racks=5)
+    ip = t.is_pod
+    assert not np.any(ip[:, 1:] & ~ip[:, :-1])      # never False → True
+    np.testing.assert_array_equal(t.n_pods, ip.sum(axis=1))
+    assert t.max_pod_racks == 5
+    assert (t.n_racks[ip] == 5).all() and (t.is_gpu == ip).all()
+    # pod_racks=1 skips the reorder entirely and reports the sentinel
+    # pod size (the pod-free placement mode's contract)
+    assert sample_mixed_traces(4, 200, seed=9, pod_racks=1).max_pod_racks == 1
+
+    from repro.core.mc_sweep import _pod_geometry
+    wa, sa = _pod_geometry([t])
+    assert wa == int(t.n_pods.max()) and sa == int(t.n_pods.min())
+    bad = sample_mixed_traces(2, 50, seed=9, pod_racks=3)
+    bad.is_pod = np.zeros_like(bad.is_pod)
+    bad.is_pod[:, 1] = True                          # a cluster before a pod
+    with pytest.raises(ValueError, match="precede"):
+        _pod_geometry([bad])
+
+
+@pytest.mark.parametrize("pod_racks", [3, 7])
+def test_mc_split_pods_matches_legacy_cond(pod_racks):
+    """The split-pods fast path (pods-first windows, trimmed rack scan,
+    HD-compacted row view) must be bit-identical to the legacy per-event
+    `lax.cond(is_pod, …)` path on the same traces."""
+    axes = MCAxes.zip(designs=[h.get_design("10N/8"), h.get_design("3+1")],
+                      seeds=[11, 12])
+    kw = dict(n_trials=2, n_events=100, year=2030, scenario=proj.HIGH,
+              pod_racks=pod_racks)
+    res_split = mc_sweep(axes, **kw)
+    res_legacy = mc_sweep(axes, legacy_pod_cond=True, **kw)
+    for f in ("lineup_stranding", "hall_stranding", "deployed_kw",
+              "saturated", "placed_a", "placed_b"):
+        np.testing.assert_array_equal(getattr(res_split, f),
+                                      getattr(res_legacy, f), err_msg=f)
+
+
+def test_refill_stream_decorrelated_from_adjacent_seed():
+    """Refill traces draw from the phase-1 stream of the same seed; the
+    old `seed + 1` refill was bitwise the next configuration's fill
+    trace, correlating trials across adjacent-seed grid points."""
+    refill = sample_mixed_traces(3, 120, seed=7, phase=1)
+    next_fill = sample_mixed_traces(3, 120, seed=8)
+    own_fill = sample_mixed_traces(3, 120, seed=7)
+    assert not np.array_equal(refill.rack_kw, next_fill.rack_kw)
+    assert not np.array_equal(refill.rack_kw, own_fill.rack_kw)
+    # still deterministic per (seed, phase)
+    np.testing.assert_array_equal(
+        refill.rack_kw, sample_mixed_traces(3, 120, seed=7, phase=1).rack_kw)
+
+
 # ---------------------------------------------------------------------------
 # split-trace fleet scan ≡ pre-refactor pod path
 # ---------------------------------------------------------------------------

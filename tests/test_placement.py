@@ -100,6 +100,90 @@ def test_gpu_only_in_hd_rows():
     assert not bool((np.asarray(feas) & ~topo.row_is_hd).any())
 
 
+def test_hall_stranding_uneven_lineup_padding():
+    """`hall_stranding` must bin line-ups by the topology's real
+    line-up→hall map.  A 2-hall topology with 3 + 4 line-ups (7 total,
+    not divisible by 2) used to be binned `arange(7) // 3` =
+    [0,0,0,1,1,1,2] — hall ids beyond H silently dropped from the
+    segment sum, mis-attributing the last line-up's capacity and load."""
+    cap = np.array([2500.0, 2500.0, 2500.0, 2000.0, 2000.0, 2000.0, 2000.0],
+                   np.float32)
+    active = np.array([True, True, False, True, True, True, True])
+    lineup_hall = np.array([0, 0, 0, 1, 1, 1, 1], np.int32)
+    ha_frac = 0.75
+    jt = pl.JaxTopology(
+        row_cap=jnp.zeros((2, 4)), row_feeds=jnp.zeros((2, 4), jnp.int32),
+        row_nfeeds=jnp.zeros((2,), jnp.int32),
+        row_is_hd=jnp.zeros((2,), bool),
+        row_domain=jnp.zeros((2,), jnp.int32),
+        row_hall=jnp.asarray([0, 1], jnp.int32),
+        hd_index=jnp.asarray([0, 1], jnp.int32),
+        lineup_cap=jnp.asarray(cap),
+        lineup_is_active=jnp.asarray(active),
+        lineup_hall=jnp.asarray(lineup_hall),
+        hall_liq_cap=jnp.zeros((2,)),
+        ha_frac=jnp.asarray(ha_frac, jnp.float32),
+        is_block=jnp.asarray(False))
+    ha = np.array([500.0, 1200.0, 300.0, 900.0, 0.0, 1500.0, 1400.0],
+                  np.float32)
+    state = pl.init_state_from(jt)._replace(lineup_ha=jnp.asarray(ha))
+
+    got = np.asarray(pl.hall_stranding(jt, state))
+    eff = ha_frac * cap * active
+    load = ha * active
+    want = np.array([
+        np.clip((eff[h].sum() - load[h].sum())
+                / max(eff[h].sum(), 1.0), 0.0, 1.0)
+        for h in (lineup_hall == 0, lineup_hall == 1)])
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_built_topology_lineup_hall_map():
+    """`build_topology` tiles line-ups per hall, so the stored map must be
+    the per-hall block layout (incl. sweep padding)."""
+    topo = h.build_topology(h.design_3p1(), n_halls=3, lineups_per_hall=6)
+    X = topo.lineup_cap.shape[0]
+    np.testing.assert_array_equal(topo.lineup_hall,
+                                  np.arange(X) // topo.lineups_per_hall)
+    jt = pl.jax_topology(topo)
+    np.testing.assert_array_equal(np.asarray(jt.lineup_hall),
+                                  topo.lineup_hall)
+    # hd_index: HD rows first, ascending, then the rest
+    hd = np.asarray(topo.row_is_hd)
+    idx = np.asarray(jt.hd_index)
+    n_hd = int(hd.sum())
+    assert topo.n_hd_rows == n_hd
+    np.testing.assert_array_equal(idx[:n_hd], np.flatnonzero(hd))
+    np.testing.assert_array_equal(np.sort(idx), np.arange(hd.shape[0]))
+
+
+def test_compacted_pod_scan_matches_full():
+    """`_place_pod` over the HD-compacted row view is bitwise the full-row
+    scan (GPU pods are HD-only, so the subset covers every feasible
+    row) — across all four policies."""
+    topo = h.build_topology(h.design_10n8())
+    jt = pl.jax_topology(topo)
+    dep = pl.Deployment.make(600.0, 5, is_gpu=True, is_pod=True)
+    active = jnp.ones((topo.row_cap.shape[0],), bool)
+    for policy in range(4):
+        st = pl.init_state(topo)
+        key = jax.random.PRNGKey(7 + policy)
+        for i in range(6):
+            k = jax.random.fold_in(key, i)
+            st_f, ok_f, rows_f, counts_f = pl._place_pod(
+                jt, st, dep, policy, k, active)
+            st_c, ok_c, rows_c, counts_c = pl._place_pod(
+                jt, st, dep, policy, k, active, hd_scan=topo.n_hd_rows)
+            assert bool(ok_f) == bool(ok_c)
+            np.testing.assert_array_equal(np.asarray(rows_f),
+                                          np.asarray(rows_c))
+            np.testing.assert_array_equal(np.asarray(counts_f),
+                                          np.asarray(counts_c))
+            for a, b in zip(jax.tree.leaves(st_f), jax.tree.leaves(st_c)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            st = st_c
+
+
 def test_never_exceeds_capacity_under_any_sequence():
     topo = h.build_topology(h.design_4n3())
     jt = pl.jax_topology(topo)

@@ -5,10 +5,12 @@ Usage:  python tools/check_speedups.py BENCH_mc.json [BENCH_sweep.json ...]
 Scans every row whose name contains "speedup" for a `<key>=<ratio>x`
 pair in its derived field and fails (exit 1) if any ratio is below the
 floor (default 1.0 — batched/split paths must never be slower than the
-sequential/legacy reference; override with --min).  Rows whose derived
-field says `skipped=` (e.g. the sharded probe on a 1-device host) are
-ignored.  At least one ratio must be found, so an empty or mis-filtered
-dump also fails.
+sequential/legacy reference; override with --min).  The gated families
+today: `sweep.speedup`, `mc.speedup`, `pod_sweep.speedup` and
+`mc_pod.speedup` — any future `*speedup*` row is gated automatically.
+Rows whose derived field says `skipped=` (e.g. the sharded probe on a
+1-device host) are ignored.  At least one ratio must be found, so an
+empty or mis-filtered dump also fails.
 """
 from __future__ import annotations
 
