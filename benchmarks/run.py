@@ -689,6 +689,52 @@ def scenario_sweep():
 
 
 @bench
+def metric_stack():
+    """Acceptance (ISSUE 6): the batched $/performance metric stage.
+
+    Times ONE jitted `tps_per_watt_grid` over a deployments × models grid
+    (pod sizes × TDP scenarios × the Table 2 suite — the grid the sweep
+    engines' metric stage evaluates per call) against the pre-refactor
+    path: one eager scalar `tps_request` per (model, deployment) pair.
+    Cross-checks the grid against the scalar loop (must agree to float
+    tolerance) and smokes `payoff.design_frontier` on its default
+    4-design × 2-pod-quanta grid."""
+    deps = [tp.Deployment(proj.KYBER, 2028, n, s)
+            for s in (proj.MED, proj.HIGH) for n in (1, 3, 5, 7)]
+    models = tp.MODEL_SUITE
+    tp.tps_per_watt_grid(models, deps).block_until_ready()   # compile
+    [float(tp.tps_per_watt(m, d)) for m in models for d in deps[:1]]
+
+    t0 = time.time()
+    grid = np.asarray(tp.tps_per_watt_grid(models, deps))
+    t_batched = time.time() - t0
+    t0 = time.time()
+    loop = np.array([[tp.tps_per_watt(m, d) for m in models] for d in deps])
+    t_loop = time.time() - t0
+    dev = float(np.abs(grid / loop - 1.0).max())
+    n = grid.size
+    emit("metric_stack.batched", t_batched / n * 1e6,
+         f"n_pairs={n};wall_s={t_batched:.3f}")
+    emit("metric_stack.loop", t_loop / n * 1e6,
+         f"wall_s={t_loop:.3f};reference=eager_scalar_tps_request")
+    emit("metric_stack.speedup", 0,
+         f"loop_over_batched={t_loop / t_batched:.2f}x;grid_dev={dev:.2e}")
+
+    env = EnvelopeSpec(demand_scale=min(SCALE, 0.01),
+                       gpu_scenario=proj.HIGH)
+    t0 = time.time()
+    pts = payoff.design_frontier(base_env=env,
+                                 models=[tp.MODELS["MoE-132T"]])
+    us = (time.time() - t0) / len(pts) * 1e6
+    front = sorted((p for p in pts if not p.dominated),
+                   key=lambda p: p.total_capex)
+    emit("metric_stack.frontier", us,
+         f"n_points={len(pts)};n_pareto={len(front)};"
+         f"best={front[0].design}:pod{front[0].pod_racks}"
+         f"=${front[0].dollars_per_tps:.2f}/tps")
+
+
+@bench
 def fig2_overview():
     """Design × workload overview (Fig. 2): TPS/W vs effective $/W."""
     _prefetch([_req(d, proj.HIGH) for d in ("4N/3", "8+2")])

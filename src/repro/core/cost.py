@@ -69,9 +69,14 @@ def reserve_cost_per_mw(design: DesignSpec) -> float:
 
 def effective_dollars_per_mw(design: DesignSpec, n_halls: int,
                              deployed_mw: float) -> float:
-    """Effective $/MW = Σ K_i / Σ P̂_i (paper §4.3)."""
+    """Effective $/MW = Σ K_i / Σ P̂_i (paper §4.3).
+
+    NaN (not inf) when nothing is deployed: the metric is *undefined* for
+    an empty fleet, and a NaN sentinel survives aggregation arithmetic as
+    "no data" where inf used to poison frontier deltas with ±inf
+    (`payoff` masks non-finite values explicitly)."""
     if deployed_mw <= 0:
-        return float("inf")
+        return float("nan")
     return n_halls * hall_capex(design) / deployed_mw
 
 
@@ -80,3 +85,11 @@ def stranding_cost_per_mw(design: DesignSpec, n_halls: int,
     """Effective − initial $/MW: infrastructure built but not deployable."""
     return (effective_dollars_per_mw(design, n_halls, deployed_mw)
             - initial_dollars_per_mw(design))
+
+
+def dollars_per_tps(total_capex: float, delivered_tps: float) -> float:
+    """Effective $ per delivered token/s — the paper's headline
+    $/performance objective.  NaN when nothing is delivered."""
+    if not (delivered_tps > 0):
+        return float("nan")
+    return total_capex / delivered_tps

@@ -35,7 +35,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding
 
-from . import arrivals, placement as pl, projections as proj
+from . import arrivals, cost, placement as pl, projections as proj
+from . import throughput as tp
 from .hierarchy import DesignSpec, HallTopology, build_topology
 from .placement import DEFAULT_POLICY, JaxTopology
 from .singlehall import TraceArrays, run_trial
@@ -123,6 +124,12 @@ class MCResult:
     placed_a: np.ndarray           # [B, T, E]
     placed_b: np.ndarray           # [B, T, E_b]
     ha_capacity_kw: np.ndarray     # [B]
+    # --- metric stage (per-trial $/performance; see `sweep.SweepResult`) ---
+    provisioned_mw: np.ndarray = None   # [B] hall nameplate
+    model_names: List[str] = field(default_factory=list)   # [Mdl]
+    delivered_tps: np.ndarray = None         # [B, T, Mdl]
+    tps_per_provisioned_w: np.ndarray = None  # [B, T, Mdl]
+    dollars_per_tps: np.ndarray = None       # [B, T, Mdl]
 
     def __len__(self):
         return len(self.axes)
@@ -304,17 +311,43 @@ def _mc_prepare(axes: MCAxes, n_trials: int, n_events: int, year: int,
     return (jt, ta, tb, keys, policy), statics
 
 
-def _mc_finalize(out, axes: MCAxes) -> MCResult:
+def _mc_finalize(out, axes: MCAxes, models=None, year: int = 2028,
+                 scenario: str = proj.MED, gpu_share: float = 1.0,
+                 pod_racks: int = 1) -> MCResult:
     lineup_str, hall_str, deployed, saturated, placed_a, placed_b = out
+    deployed = np.asarray(deployed)                              # [B, T] kW
+    provisioned = np.array([d.ha_capacity_kw / 1e3 for d in axes.designs])
+    models = (tp.MODEL_SUITE if models is None
+              else tuple(tp.resolve_model(m) for m in models))
+    if models:
+        # one serving deployment for the whole call (year/scenario/pod size
+        # are call-level), so the metric stage is a single [1, Mdl] grid
+        dep = tp.serving_deployment(year, scenario, pod_racks)
+        tpw = np.asarray(tp.tps_per_watt_grid(models, [dep]))[0]  # [Mdl]
+        capex = np.array([cost.hall_capex(d) for d in axes.designs])
+        delivered = (deployed * 1e3 * gpu_share)[..., None] * tpw
+        with np.errstate(divide="ignore", invalid="ignore"):
+            tps_per_pw = delivered / (provisioned[:, None, None] * 1e6)
+            dpt = np.where(delivered > 0,
+                           capex[:, None, None] / delivered, np.nan)
+    else:
+        B, T = deployed.shape
+        delivered = np.zeros((B, T, 0))
+        tps_per_pw, dpt = delivered.copy(), delivered.copy()
     return MCResult(
         axes=axes,
         lineup_stranding=np.asarray(lineup_str),
         hall_stranding=np.asarray(hall_str),
-        deployed_kw=np.asarray(deployed),
+        deployed_kw=deployed,
         saturated=np.asarray(saturated),
         placed_a=np.asarray(placed_a),
         placed_b=np.asarray(placed_b),
         ha_capacity_kw=np.array([d.ha_capacity_kw for d in axes.designs]),
+        provisioned_mw=provisioned,
+        model_names=[m.name for m in models],
+        delivered_tps=delivered,
+        tps_per_provisioned_w=tps_per_pw,
+        dollars_per_tps=dpt,
     )
 
 
@@ -324,7 +357,7 @@ def mc_sweep(axes: MCAxes, n_trials: int = 32, n_events: int = 600,
              quantum_racks: int = 10, la_fraction: float = 0.0,
              harvest: bool = True, single_sku_gpu: bool = False,
              refill_events: int | None = None,
-             legacy_pod_cond: bool = False) -> MCResult:
+             legacy_pod_cond: bool = False, models=None) -> MCResult:
     """Evaluate every single-hall MC configuration in `axes` in one
     compiled call (`n_trials` trials each).
 
@@ -359,6 +392,9 @@ def mc_sweep(axes: MCAxes, n_trials: int = 32, n_events: int = 600,
             ``max(200, n_events // 3)``, matching `monte_carlo`).
         legacy_pod_cond: compile the pre-split per-event
             `lax.cond(is_pod, …)` path instead (results identical).
+        models: Table 2 models (objects or names) for the per-trial
+            $/performance columns (default `throughput.MODEL_SUITE`;
+            `()` skips the stage).
     """
     args, statics = _mc_prepare(axes, n_trials, n_events, year, scenario,
                                 gpu_power_share, pod_racks,
@@ -366,7 +402,10 @@ def mc_sweep(axes: MCAxes, n_trials: int = 32, n_events: int = 600,
                                 single_sku_gpu, refill_events,
                                 legacy_pod_cond)
     out = _mc_sweep_jit(*args, harvest=harvest, **statics)
-    return _mc_finalize(out, axes)
+    return _mc_finalize(out, axes, models=models, year=year,
+                        scenario=scenario,
+                        gpu_share=1.0 if single_sku_gpu else gpu_power_share,
+                        pod_racks=pod_racks)
 
 
 def sharded_mc_sweep(axes: MCAxes, n_trials: int = 32, n_events: int = 600,
@@ -376,8 +415,8 @@ def sharded_mc_sweep(axes: MCAxes, n_trials: int = 32, n_events: int = 600,
                      harvest: bool = True, single_sku_gpu: bool = False,
                      refill_events: int | None = None,
                      legacy_pod_cond: bool = False,
-                     devices: Sequence[jax.Device] | None = None
-                     ) -> MCResult:
+                     devices: Sequence[jax.Device] | None = None,
+                     models=None) -> MCResult:
     """`mc_sweep`, with the (config × trial) batch sharded over devices.
 
     Same 1-D `CONFIG_AXIS` mesh discipline as `sweep.sharded_sweep`, but
@@ -397,7 +436,7 @@ def sharded_mc_sweep(axes: MCAxes, n_trials: int = 32, n_events: int = 600,
               pod_racks=pod_racks, quantum_racks=quantum_racks,
               la_fraction=la_fraction, harvest=harvest,
               single_sku_gpu=single_sku_gpu, refill_events=refill_events,
-              legacy_pod_cond=legacy_pod_cond)
+              legacy_pod_cond=legacy_pod_cond, models=models)
     devs = list(devices) if devices is not None else list(jax.devices())
     B, T = len(axes), int(n_trials)
     if len(devs) <= 1 or B * T == 1:
@@ -427,4 +466,7 @@ def sharded_mc_sweep(axes: MCAxes, n_trials: int = 32, n_events: int = 600,
     out = _mc_sharded_jit(*args, harvest=harvest, mesh=mesh, **statics)
     out = jax.tree.map(
         lambda x: x[:B * T].reshape((B, T) + x.shape[1:]), out)
-    return _mc_finalize(out, axes)
+    return _mc_finalize(out, axes, models=models, year=year,
+                        scenario=scenario,
+                        gpu_share=1.0 if single_sku_gpu else gpu_power_share,
+                        pod_racks=pod_racks)

@@ -41,7 +41,12 @@ FAMILY_SHOCK = "shock"
 FAMILY_COHORT = "cohort"
 FAMILY_MIX = "mix"
 FAMILY_REFRESH = "refresh"
+# The four arrival-perturbation families `scenario_frontier` runs by
+# default.  FAMILY_POD is deliberately NOT in this tuple: pod quanta
+# change the placement granularity (a design-frontier axis), not the
+# arrival stream, so `pod_quanta` batches are opt-in.
 FAMILIES = (FAMILY_SHOCK, FAMILY_COHORT, FAMILY_MIX, FAMILY_REFRESH)
+FAMILY_POD = "pod"
 BASELINE_TAG = "baseline:paper"
 
 
@@ -166,6 +171,25 @@ def refresh_waves(base: Optional[EnvelopeSpec] = None, *,
         FAMILY_REFRESH,
         tuple(f"c{c}" for c in cycles),
         tuple(replace(base, refresh_cycle_m=c) for c in cycles))
+
+
+def pod_quanta(base: Optional[EnvelopeSpec] = None, *,
+               pod_sizes: Sequence[int] = (1, 5)) -> ScenarioBatch:
+    """Pod placement-quantum family: the §6.5 serving-vs-deployability
+    axis (`payoff.design_frontier` consumes this).
+
+    One perturbation per pod size: GPU arrivals come in `p`-rack pods
+    (`p = 1` is the rack-scale baseline quantum; pod sizes > 1 switch to
+    Kyber pod-scale racks).  Labels: `p{size}`.  Not part of `FAMILIES` /
+    `all_families` — see the note on the tuple above.
+    """
+    base = base if base is not None else EnvelopeSpec()
+    sizes = tuple(int(p) for p in pod_sizes)
+    return ScenarioBatch(
+        FAMILY_POD,
+        tuple(f"p{p}" for p in sizes),
+        tuple(replace(base, pod_racks=p, pod_scale_arch=p > 1 or
+                      base.pod_scale_arch) for p in sizes))
 
 
 def all_families(base: Optional[EnvelopeSpec] = None

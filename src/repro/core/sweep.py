@@ -40,7 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding
 
-from . import cost, placement as pl
+from . import cost, placement as pl, throughput as tp
 from .arrivals import EnvelopeSpec, Trace, generate_fleet_trace
 from .fleet import (FleetConfig, FleetResult, FleetTrace, _auto_halls,
                     _event_windows, _month_e_max, _pod_scan_len,
@@ -155,6 +155,12 @@ class SweepResult:
     initial_dpm: np.ndarray        # [B] $/MW at commissioning
     effective_dpm: np.ndarray      # [B] lifecycle-effective $/MW
     total_capex: np.ndarray        # [B] $
+    # --- metric stage (paper §5.4/§6.6: $/performance, not installed MW) ---
+    provisioned_mw: np.ndarray = None   # [B] halls built × HA nameplate
+    model_names: List[str] = field(default_factory=list)   # [Mdl]
+    delivered_tps: np.ndarray = None         # [B, Mdl] fleet tokens/s
+    tps_per_provisioned_w: np.ndarray = None  # [B, Mdl] tokens/s per built W
+    dollars_per_tps: np.ndarray = None       # [B, Mdl] capex / delivered TPS
 
     def __len__(self):
         return len(self.axes)
@@ -310,8 +316,62 @@ def _prepare(axes: SweepAxes, n_halls_max: int,
         hd_scan
 
 
+def serving_tpw_rows(envs: Sequence[EnvelopeSpec],
+                     models: Sequence[tp.MoEModel],
+                     metric_year: int | None = None) -> np.ndarray:
+    """[B, Mdl] serving tokens/s-per-watt rows for a batch of envelopes.
+
+    Each envelope implies one serving deployment (`tp.serving_deployment`
+    at `metric_year`, default its `end_year`, at its placement quantum);
+    batches share few distinct deployments, so rows are gathered from ONE
+    jitted `tps_per_watt_grid` over the unique set.  Shared with
+    `mc_sweep` and `payoff`."""
+    keys = [(int(metric_year or e.end_year), e.gpu_scenario,
+             max(int(e.pod_racks), 1),
+             bool(e.pod_scale_arch or e.pod_racks > 1)) for e in envs]
+    uniq = sorted(set(keys))
+    deps = [tp.serving_deployment(*k) for k in uniq]
+    grid = np.asarray(tp.tps_per_watt_grid(models, deps))
+    row = {k: grid[i] for i, k in enumerate(uniq)}
+    return np.stack([row[k] for k in keys])
+
+
+def gpu_power_share(env: EnvelopeSpec) -> float:
+    """Fraction of deployed MW that is GPU serving capacity (the rest is
+    general compute / storage and delivers no tokens)."""
+    total = env.gpu_gw + env.compute_gw + env.storage_gw
+    return env.gpu_gw / total if total > 0 else 0.0
+
+
+def _metric_stage(axes: SweepAxes, models, metric_year,
+                  deployed_mw: np.ndarray, provisioned_mw: np.ndarray,
+                  capex: np.ndarray):
+    """Batched throughput/cost columns over final deployed capacity.
+
+    `deployed_mw`/`provisioned_mw`/`capex` are [B]; returns
+    (model_names, delivered_tps, tps_per_provisioned_w, dollars_per_tps)
+    each [B, Mdl].  NaN marks undefined ratios (nothing built or nothing
+    delivered), never inf."""
+    models = (tp.MODEL_SUITE if models is None
+              else tuple(tp.resolve_model(m) for m in models))
+    B = len(axes)
+    if not models:
+        empty = np.zeros((B, 0))
+        return [], empty, empty.copy(), empty.copy()
+    tpw = serving_tpw_rows(axes.envs, models, metric_year)
+    share = np.array([gpu_power_share(e) for e in axes.envs])
+    delivered = tpw * (deployed_mw * 1e6 * share)[:, None]
+    with np.errstate(divide="ignore", invalid="ignore"):
+        tps_per_pw = np.where(provisioned_mw[:, None] > 0,
+                              delivered / (provisioned_mw[:, None] * 1e6),
+                              np.nan)
+        dpt = np.where(delivered > 0, capex[:, None] / delivered, np.nan)
+    return [m.name for m in models], delivered, tps_per_pw, dpt
+
+
 def _finalize(out, axes: SweepAxes, months: int, topos, X_pad: int,
-              mature_months: int) -> SweepResult:
+              mature_months: int, models=None,
+              metric_year: int | None = None) -> SweepResult:
     """Host-side unpack of batched `SimOutputs` + cost model into a
     `SweepResult` (shared by `sweep` and `sharded_sweep`)."""
     n_built = np.asarray(out.n_halls_built).astype(int)
@@ -323,6 +383,10 @@ def _finalize(out, axes: SweepAxes, months: int, topos, X_pad: int,
         for d, n, mw in zip(axes.designs, n_built, deployed_mw)])
     capex = np.array([int(n) * cost.hall_capex(d)
                       for d, n in zip(axes.designs, n_built)])
+    provisioned = np.array([int(n) * d.ha_capacity_kw / 1e3
+                            for d, n in zip(axes.designs, n_built)])
+    names, delivered, tps_per_pw, dpt = _metric_stage(
+        axes, models, metric_year, deployed_mw, provisioned, capex)
     return SweepResult(
         axes=axes,
         months=np.arange(months),
@@ -341,13 +405,19 @@ def _finalize(out, axes: SweepAxes, months: int, topos, X_pad: int,
         initial_dpm=initial,
         effective_dpm=effective,
         total_capex=capex,
+        provisioned_mw=provisioned,
+        model_names=names,
+        delivered_tps=delivered,
+        tps_per_provisioned_w=tps_per_pw,
+        dollars_per_tps=dpt,
     )
 
 
 def sweep(axes: SweepAxes, harvest: bool = True, mature_months: int = 12,
           n_halls_max: int = 0,
           traces: Sequence[Trace] | None = None,
-          legacy_pod_cond: bool = False) -> SweepResult:
+          legacy_pod_cond: bool = False, models=None,
+          metric_year: int | None = None) -> SweepResult:
     """Evaluate every configuration in `axes` in one compiled call.
 
     All envelopes must share the same buildout horizon (the scan length).
@@ -381,19 +451,26 @@ def sweep(axes: SweepAxes, harvest: bool = True, mature_months: int = 12,
             `lax.cond(is_pod, …)` + retry path instead (reference for
             `pod_sweep_speedup` and the split-equivalence tests; results
             are identical).
+        models: Table 2 models (objects or names) for the $/performance
+            metric stage (default `throughput.MODEL_SUITE`; `()` skips
+            the stage).
+        metric_year: serving-deployment year for the metric stage
+            (default: each envelope's `end_year`).
     """
     args, months, topos, X_pad, with_pods, pod_len, hd_scan = _prepare(
         axes, n_halls_max, traces, legacy_pod_cond)
     out = _sweep_jit(*args, harvest=harvest, mature_months=mature_months,
                      with_pods=with_pods, legacy_pod_cond=legacy_pod_cond,
                      pod_scan_len=pod_len, hd_scan=hd_scan)
-    return _finalize(out, axes, months, topos, X_pad, mature_months)
+    return _finalize(out, axes, months, topos, X_pad, mature_months,
+                     models=models, metric_year=metric_year)
 
 
 def sharded_sweep(axes: SweepAxes, harvest: bool = True,
                   mature_months: int = 12, n_halls_max: int = 0,
                   traces: Sequence[Trace] | None = None,
-                  devices: Sequence[jax.Device] | None = None
+                  devices: Sequence[jax.Device] | None = None,
+                  models=None, metric_year: int | None = None
                   ) -> SweepResult:
     """`sweep`, with the configuration axis sharded over a device mesh.
 
@@ -422,7 +499,8 @@ def sharded_sweep(axes: SweepAxes, harvest: bool = True,
     devs = list(devices) if devices is not None else list(jax.devices())
     if len(devs) <= 1 or len(axes) == 1:
         return sweep(axes, harvest=harvest, mature_months=mature_months,
-                     n_halls_max=n_halls_max, traces=traces)
+                     n_halls_max=n_halls_max, traces=traces, models=models,
+                     metric_year=metric_year)
 
     args, months, topos, X_pad, with_pods, pod_len, hd_scan = _prepare(
         axes, n_halls_max, traces)
@@ -442,4 +520,5 @@ def sharded_sweep(axes: SweepAxes, harvest: bool = True,
                              hd_scan=hd_scan, mesh=mesh)
     if B_pad != B:
         out = jax.tree.map(lambda x: x[:B], out)
-    return _finalize(out, axes, months, topos, X_pad, mature_months)
+    return _finalize(out, axes, months, topos, X_pad, mature_months,
+                     models=models, metric_year=metric_year)

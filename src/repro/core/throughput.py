@@ -7,15 +7,26 @@ with per-token compute/memory costs (Eqs. 6–9), TP/EP communication
 request-level aggregation (Eq. 17; see DESIGN.md §4 for the dimensional
 reading we implement).
 
-All functions are jnp-traceable so grids of (model × deployment × year)
-evaluate via vmap.  `CostScale` lets `core.calibration` replace the
-first-order analytic coefficients with HLO-measured ones (beyond-paper).
+Traceability contract: the locality integers (`n_units`, `n_domains`,
+Eq. 12) are genuinely static per (model, deployment) pair — they round
+byte counts with `ceil` — so they can never be traced.  `PairStatics`
+hoists everything that depends on them (bandwidths, comm times, power)
+into one precomputed record; the `*_s` evaluators below it are pure jnp
+over those statics, so a whole configurations × models grid evaluates
+as ONE jitted call (`tps_request_grid` / `tps_per_watt_grid`, the sweep
+engines' metric stage).  The scalar API (`tps_prefill`, `tps_request`,
+…) is the single-pair wrapper over the same evaluators.
+
+`CostScale` lets `core.calibration` replace the first-order analytic
+coefficients with HLO-measured ones (beyond-paper).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, replace
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -138,6 +149,19 @@ class Deployment:
         return rack_kw * n * 1e3
 
 
+def serving_deployment(year: int, scenario: str, pod_racks: int = 1,
+                       pod_scale: bool | None = None) -> Deployment:
+    """The serving `Deployment` implied by a simulator operating point:
+    the architecture in service for `year` (`projections
+    .deployment_arch_for`, pod-scale Kyber racks when pods are in play)
+    at the envelope's placement quantum.  Shared by the sweep engines'
+    metric stage and `payoff`."""
+    pod_racks = max(int(pod_racks), 1)
+    pod_scale = pod_racks > 1 if pod_scale is None else bool(pod_scale)
+    arch = proj.deployment_arch_for(year, pod_scale)
+    return Deployment(arch, year, pod_racks, scenario)
+
+
 class CostScale(NamedTuple):
     """Multipliers applied to the analytic per-token costs — identity by
     default; `core.calibration` sets these from compiled-HLO measurements."""
@@ -148,17 +172,19 @@ class CostScale(NamedTuple):
 
 IDENT = CostScale()
 
+DTYPE = jnp.float32    # one dtype for every traced per-token cost
+
 
 # --- per-token costs (Eqs. 6–11) ---
 
 def c_prefill(m: MoEModel, s_p):                  # Eq. 6 (FLOPs/token)
-    s_p = jnp.asarray(s_p, jnp.float64) if hasattr(s_p, "shape") else float(s_p)
+    s_p = jnp.asarray(s_p, DTYPE)
     return float(m.L) * (4.0 * m.K * m.w * m.FF + 4.0 * m.w ** 2
                          + 2.0 * m.w * s_p)
 
 
 def c_decode(m: MoEModel, t):                     # Eq. 7
-    t = jnp.asarray(t, jnp.float32)
+    t = jnp.asarray(t, DTYPE)
     return float(m.L) * (4.0 * m.K * m.w * m.FF + 4.0 * m.w ** 2
                          + 2.0 * m.w * t)
 
@@ -168,7 +194,7 @@ def m_prefill(m: MoEModel, s_p, batch=BATCH):     # Eq. 8 (bytes/token)
 
 
 def m_decode(m: MoEModel, t, batch=BATCH):        # Eq. 9
-    t = jnp.asarray(t, jnp.float32)
+    t = jnp.asarray(t, DTYPE)
     return m.w_active_bytes / batch + 2.0 * m.L * m.w * (t + 1.0) * B_KV
 
 
@@ -193,6 +219,9 @@ def f_ib(m: MoEModel, d: Deployment):             # Eq. 13
 
 
 def t_comm(m: MoEModel, d: Deployment, scale: CostScale = IDENT):
+    """Eqs. 14–16.  Pure host-float math over the pair's locality
+    statics (no dtype/shape forks) — `PairStatics` records the unscaled
+    value so grids never re-derive it inside a trace."""
     tp = n_tp(m, d.tp_degree) / d.b_nvl                      # Eq. 14
     f = f_ib(m, d)
     nd = n_domains(m, d)
@@ -202,6 +231,65 @@ def t_comm(m: MoEModel, d: Deployment, scale: CostScale = IDENT):
     ep = max((1 - f) * n_ep(m) / d.b_nvl,                    # Eq. 15
              f * n_ep(m) / b_ib if f > 0 else 0.0)
     return scale.comm * (tp + ep)                            # Eq. 16
+
+
+# --- precomputed pair statics (the vmap-safe layer) ---
+
+class PairStatics(NamedTuple):
+    """Everything Eqs. 5–18 need about one (model, deployment) pair,
+    with the static `ceil`-derived integers (`n_units`, `n_domains`)
+    already folded in.  Leaves are host floats for one pair
+    (`pair_statics`) or [C, M] jnp arrays for a deployments × models
+    grid (`grid_statics`); the `*_s` evaluators are pure jnp over any
+    leaf shape."""
+    c0: object       # constant FLOPs/token (Eqs. 6/7 shared term)
+    c1: object       # context-linear FLOPs/token coefficient (2·L·w)
+    m_pre: object    # prefill bytes/token at (s_p, batch) (Eq. 8)
+    m_dec0: object   # decode bytes/token constant (Eq. 9)
+    m_dec1: object   # decode bytes/token per (t+1): 2·L·w·b_kv
+    s_p: object      # prompt length
+    f_flops: object  # Eq. 20
+    b_hbm: object    # Eq. 21
+    t_comm: object   # Eqs. 14–16, unscaled
+    t_kv: object     # Eq. 18 per-request-batch KV transfer time
+    power_w: object  # Eq. 25 over the co-scheduled units
+
+
+def resolve_model(m) -> MoEModel:
+    """Accept a `MoEModel` or a Table 2 model name (key of `MODELS`)."""
+    return MODELS[m] if isinstance(m, str) else m
+
+
+def pair_statics(m: MoEModel, d: Deployment, s_p=None,
+                 batch=BATCH) -> PairStatics:
+    """Host-side statics for one (model, deployment) pair — the only
+    place the Python `int`/`ceil` casts live."""
+    m = resolve_model(m)
+    s_p = float(m.S if s_p is None else s_p)
+    return PairStatics(
+        c0=float(m.L) * (4.0 * m.K * m.w * m.FF + 4.0 * m.w ** 2),
+        c1=2.0 * m.L * m.w,
+        m_pre=m.w_total_bytes / (batch * s_p) + 2 * m.L * m.w * B_KV,
+        m_dec0=m.w_active_bytes / batch,
+        m_dec1=2.0 * m.L * m.w * B_KV,
+        s_p=s_p,
+        f_flops=d.f_flops(m),
+        b_hbm=d.b_hbm(m),
+        t_comm=t_comm(m, d),
+        t_kv=t_kv_transfer(m, s_p, d.b_ib(m)),
+        power_w=d.power_w(m),
+    )
+
+
+def grid_statics(models: Sequence[MoEModel], deployments: Sequence[Deployment],
+                 batch=BATCH) -> PairStatics:
+    """[C, M] statics for a deployments × models grid (C deployments,
+    M models), ready for the jitted `*_s` evaluators."""
+    rows = [[pair_statics(m, d, batch=batch) for m in models]
+            for d in deployments]
+    return PairStatics(*(jnp.asarray(
+        [[getattr(st, f) for st in row] for row in rows], DTYPE)
+        for f in PairStatics._fields))
 
 
 # --- phase & request throughput (Eqs. 5, 17, 18) ---
@@ -218,19 +306,86 @@ def _combine(t_comp, t_mem, t_cm, mode):
     return 1.0 / (jnp.maximum(t_comp, t_mem) + t_cm)
 
 
+def _f32(st: PairStatics) -> PairStatics:
+    return PairStatics(*(jnp.asarray(x, DTYPE) for x in st))
+
+
+def tps_prefill_s(st: PairStatics, scale: CostScale = IDENT,
+                  mode=DEFAULT_MODE):
+    """Eq. 5, prefill phase — pure jnp over statics of any shape."""
+    st = _f32(st)
+    t_comp = scale.compute * (st.c0 + st.c1 * st.s_p) / st.f_flops
+    t_mem = scale.memory * st.m_pre / st.b_hbm
+    return _combine(t_comp, t_mem, scale.comm * st.t_comm, mode)
+
+
+def tps_decode_s(st: PairStatics, t, scale: CostScale = IDENT,
+                 mode=DEFAULT_MODE):
+    """Eq. 5, decode phase at context length `t` (broadcastable)."""
+    st = _f32(st)
+    t = jnp.asarray(t, DTYPE)
+    t_comp = scale.compute * (st.c0 + st.c1 * t) / st.f_flops
+    t_mem = scale.memory * (st.m_dec0 + st.m_dec1 * (t + 1.0)) / st.b_hbm
+    return _combine(t_comp, t_mem, scale.comm * st.t_comm, mode)
+
+
+def tps_request_s(st: PairStatics, s_out: int = 256,
+                  scale: CostScale = IDENT, batch=BATCH, mode=DEFAULT_MODE):
+    """Request-level throughput (Eq. 17, dimensional reading per
+    DESIGN.md): T_total = B·S_p/TPS_pre + Σ_t B/TPS_dec(t) + T_KV;
+    TPS_req = B·S_out / T_total [tokens/s].  Pure jnp: the decode sum
+    broadcasts a trailing context axis against statics of any shape, so
+    a [C, M] grid is one fused evaluation."""
+    st = _f32(st)
+    t_pre = batch * st.s_p / tps_prefill_s(st, scale, mode)
+    st_b = PairStatics(*(x[..., None] for x in st))
+    ts = st.s_p[..., None] + jnp.arange(1, s_out + 1, dtype=DTYPE)
+    t_dec = jnp.sum(batch / tps_decode_s(st_b, ts, scale, mode), axis=-1)
+    return batch * s_out / (t_pre + t_dec + st.t_kv)
+
+
+def tps_per_watt_s(st: PairStatics, s_out: int = 256,
+                   scale: CostScale = IDENT, batch=BATCH, mode=DEFAULT_MODE):
+    st = _f32(st)
+    return tps_request_s(st, s_out, scale, batch, mode) / st.power_w
+
+
+@functools.partial(jax.jit, static_argnames=("s_out", "batch", "mode",
+                                             "per_watt"))
+def _grid_jit(st, scale, s_out, batch, mode, per_watt):
+    fn = tps_per_watt_s if per_watt else tps_request_s
+    return fn(st, s_out, scale, batch, mode)
+
+
+def tps_request_grid(models: Sequence[MoEModel],
+                     deployments: Sequence[Deployment], s_out: int = 256,
+                     scale: CostScale = IDENT, batch=BATCH,
+                     mode=DEFAULT_MODE) -> jnp.ndarray:
+    """[C, M] request throughput for a deployments × models grid in ONE
+    jitted call (C deployments, M models) — the batched metric stage the
+    sweep engines consume.  Equals the scalar `tps_request` per pair
+    (`tests/test_metric_stack.py` pins grid ≡ loop)."""
+    st = grid_statics(models, deployments, batch=batch)
+    return _grid_jit(st, scale, s_out, batch, mode, False)
+
+
+def tps_per_watt_grid(models: Sequence[MoEModel],
+                      deployments: Sequence[Deployment], s_out: int = 256,
+                      scale: CostScale = IDENT, batch=BATCH,
+                      mode=DEFAULT_MODE) -> jnp.ndarray:
+    """[C, M] tokens/s per serving watt (Eq. 25 normalization)."""
+    st = grid_statics(models, deployments, batch=batch)
+    return _grid_jit(st, scale, s_out, batch, mode, True)
+
+
 def tps_prefill(m: MoEModel, d: Deployment, s_p=None,
                 scale: CostScale = IDENT, batch=BATCH, mode=DEFAULT_MODE):
-    s_p = m.S if s_p is None else s_p
-    t_comp = scale.compute * c_prefill(m, s_p) / d.f_flops(m)
-    t_mem = scale.memory * m_prefill(m, s_p, batch) / d.b_hbm(m)
-    return float(_combine(t_comp, t_mem, t_comm(m, d, scale), mode))
+    return tps_prefill_s(pair_statics(m, d, s_p, batch), scale, mode)
 
 
 def tps_decode(m: MoEModel, d: Deployment, t,
                scale: CostScale = IDENT, batch=BATCH, mode=DEFAULT_MODE):
-    t_comp = scale.compute * c_decode(m, t) / d.f_flops(m)
-    t_mem = scale.memory * m_decode(m, t, batch) / d.b_hbm(m)
-    return _combine(t_comp, t_mem, t_comm(m, d, scale), mode)
+    return tps_decode_s(pair_statics(m, d, batch=batch), t, scale, mode)
 
 
 def t_kv_transfer(m: MoEModel, s_p, b_transfer):  # Eq. 18
@@ -239,15 +394,10 @@ def t_kv_transfer(m: MoEModel, s_p, b_transfer):  # Eq. 18
 
 def tps_request(m: MoEModel, d: Deployment, s_out: int = 256,
                 scale: CostScale = IDENT, batch=BATCH, mode=DEFAULT_MODE):
-    """Request-level throughput (Eq. 17, dimensional reading per DESIGN.md):
-    T_total = B·S_p/TPS_pre + Σ_t B/TPS_dec(t) + T_KV;
-    TPS_req = B·S_out / T_total   [tokens/s]."""
-    s_p = m.S
-    t_pre = batch * s_p / tps_prefill(m, d, s_p, scale, batch, mode)
-    ts = jnp.arange(s_p + 1, s_p + s_out + 1)
-    t_dec = jnp.sum(batch / tps_decode(m, d, ts, scale, batch, mode))
-    t_kv = t_kv_transfer(m, s_p, d.b_ib(m))
-    return batch * s_out / (t_pre + t_dec + t_kv)
+    """Request-level throughput for one pair (Eq. 17) — the scalar
+    wrapper over `tps_request_s`."""
+    return tps_request_s(pair_statics(m, d, batch=batch), s_out, scale,
+                         batch, mode)
 
 
 def tps_per_watt(m: MoEModel, d: Deployment, s_out: int = 256,

@@ -1,0 +1,264 @@
+"""Metric stack: throughput-model references (Eqs. 6–16), the batched
+grid evaluator, the sweep/mc $/performance columns, the corrected
+fleet-level TPS/W normalization, and the design frontier."""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core import cost, hierarchy as h, mc_sweep as mcs, payoff
+from repro.core import projections as proj, sweep as sw, throughput as tp
+from repro.core.arrivals import EnvelopeSpec
+
+TINY = tp.MoEModel("tiny", L=2, w=64, E=4, K=2, S=8)
+
+
+class TestThroughputReferences:
+    """Hand-computed Eq. 6–16 values for a small model/deployment pair."""
+
+    def test_eq6_prefill_flops(self):
+        # L·(4·K·w·FF + 4·w² + 2·w·s_p) with L=2, w=64, FF=256, K=2:
+        # 4·2·64·256 = 131072;  4·64² = 16384;  2·64·8 = 1024 → ×2 = 296960
+        assert float(tp.c_prefill(TINY, 8)) == 296960.0
+        # Eq. 7 has the same form in the generation index t
+        assert float(tp.c_decode(TINY, 8)) == 296960.0
+
+    def test_eq8_eq9_bytes_per_token(self):
+        # Eq. 8: W_total/(B·s_p) + 2·L·w·b_kv.  W_total = L(4w² + E·2·w·FF)
+        w_total = 2 * (4 * 64 ** 2 + 4 * 2 * 64 * 256) * 1.0
+        assert TINY.w_total_bytes == w_total == 294912.0
+        assert tp.m_prefill(TINY, 8, batch=4) == w_total / 32 + 128.0
+        # Eq. 9: W_active/B + 2·L·w·(t+1)·b_kv, W_active at K=2 experts
+        w_active = 2 * (4 * 64 ** 2 + 2 * 2 * 64 * 256) * 1.0
+        assert TINY.w_active_bytes == w_active == 163840.0
+        assert float(tp.m_decode(TINY, 3, batch=4)) == w_active / 4 + 4 * 128.0
+
+    def test_eq10_eq11_collective_bytes(self):
+        # Eq. 10: L·2·(T−1)/T·w·b_act at TP degree 4 → 2·2·(3/4)·64·0.5
+        assert tp.n_tp(TINY, 4) == 96.0
+        # Eq. 11: 2·L·K·w·b_act
+        assert tp.n_ep(TINY) == 256.0
+
+    def test_eq12_eq13_locality(self):
+        m = tp.MODELS["MoE-401T"]
+        d = tp.Deployment(proj.KYBER, 2028, 1, "high")
+        # Eq. 12: ceil(W_total / (α·domain_pkgs·HBM_pkg))
+        usable = tp.ALPHA_HBM * d.domain_pkgs * d.hbm_pkg_bytes
+        nd = int(np.ceil(m.w_total_bytes / usable))
+        assert tp.n_domains(m, d) == nd > 1
+        assert tp.f_ib(m, d) == 1.0 - 1.0 / nd     # Eq. 13
+
+    def test_eq14_16_comm_and_incast_share(self):
+        m = tp.MODELS["MoE-401T"]
+        d = tp.Deployment(proj.KYBER, 2028, 1, "high")
+        nd = tp.n_domains(m, d)
+        f = 1.0 - 1.0 / nd
+        # Eq. 14–16 assembled from the primitive terms: remote EP traffic
+        # sees only the 1/n_d incast share of the scale-out fabric
+        expect = (tp.n_tp(m, d.tp_degree) / d.b_nvl
+                  + max((1 - f) * tp.n_ep(m) / d.b_nvl,
+                        f * tp.n_ep(m) / (d.b_ib(m) / nd)))
+        assert tp.t_comm(m, d) == pytest.approx(expect, rel=1e-12)
+        # without the incast penalty the remote term is n_d× cheaper
+        d_no = tp.Deployment(proj.KYBER, 2028, 1, "high",
+                             incast_penalty=False)
+        assert tp.t_comm(m, d_no) < tp.t_comm(m, d)
+
+    def test_c_prefill_dtype_unified(self):
+        # the old code forked on hasattr(s_p, "shape") and requested
+        # float64 on the array branch (silently downcast without x64)
+        arr = tp.c_prefill(TINY, np.array([8.0, 16.0]))
+        scl = tp.c_prefill(TINY, 8.0)
+        assert arr.dtype == scl.dtype == tp.DTYPE
+        assert float(arr[0]) == float(scl)
+
+
+class TestGridEvaluator:
+    def test_grid_matches_scalar_loop(self):
+        """One jitted [C, M] grid ≡ the per-pair Python loop (Table 2)."""
+        deps = [tp.Deployment(proj.KYBER, 2028, n, "high")
+                for n in (1, 3, 5, 7)]
+        grid = np.asarray(tp.tps_request_grid(tp.MODEL_SUITE, deps))
+        loop = np.array([[float(tp.tps_request(m, d))
+                          for m in tp.MODEL_SUITE] for d in deps])
+        np.testing.assert_allclose(grid, loop, rtol=1e-4)
+
+    def test_per_watt_grid_matches_scalar(self):
+        deps = [tp.Deployment(proj.KYBER, 2030, 1, "med"),
+                tp.Deployment(proj.VERA_RUBIN, 2030, 1, "med")]
+        grid = np.asarray(tp.tps_per_watt_grid(tp.MODEL_SUITE, deps))
+        loop = np.array([[tp.tps_per_watt(m, d)
+                          for m in tp.MODEL_SUITE] for d in deps])
+        np.testing.assert_allclose(grid, loop, rtol=1e-4)
+
+    def test_pair_statics_hoists_locality_ints(self):
+        m = tp.MODELS["MoE-401T"]
+        d = tp.Deployment(proj.KYBER, 2028, 1, "high")
+        st = tp.pair_statics(m, d)
+        assert st.f_flops == d.f_flops(m)       # includes n_units scaling
+        assert st.t_comm == tp.t_comm(m, d)     # includes n_domains/incast
+        assert st.power_w == d.power_w(m)
+
+
+class TestCostSentinels:
+    def test_effective_dpm_nan_not_inf_when_undeployed(self):
+        d = h.get_design("4N/3")
+        assert np.isnan(cost.effective_dollars_per_mw(d, 5, 0.0))
+        assert np.isnan(cost.stranding_cost_per_mw(d, 5, 0.0))
+        assert np.isfinite(cost.effective_dollars_per_mw(d, 5, 10.0))
+
+    def test_dollars_per_tps_sentinel(self):
+        assert np.isnan(cost.dollars_per_tps(1e9, 0.0))
+        assert np.isnan(cost.dollars_per_tps(1e9, float("nan")))
+        assert cost.dollars_per_tps(1e9, 1e6) == 1e3
+
+
+class TestSweepMetricColumns:
+    @pytest.fixture(scope="class")
+    def res(self):
+        axes = sw.SweepAxes.product(
+            [h.get_design("4N/3"), h.get_design("3+1")],
+            [EnvelopeSpec(demand_scale=0.01, gpu_scenario=proj.HIGH)],
+            seeds=(0,))
+        return axes, sw.sweep(axes)
+
+    def test_columns_present_and_consistent(self, res):
+        axes, r = res
+        B, M = len(axes), len(tp.MODEL_SUITE)
+        assert r.model_names == [m.name for m in tp.MODEL_SUITE]
+        assert r.delivered_tps.shape == (B, M)
+        assert r.tps_per_provisioned_w.shape == (B, M)
+        assert r.dollars_per_tps.shape == (B, M)
+        # delivered = serving TPS/W × deployed GPU watts, per envelope
+        env = axes.envs[0]
+        dep = tp.serving_deployment(env.end_year, env.gpu_scenario,
+                                    env.pod_racks)
+        share = sw.gpu_power_share(env)
+        for i in (0, 1):
+            expect = (tp.tps_per_watt(tp.MODEL_SUITE[0], dep)
+                      * r.final_deployed_mw[i] * 1e6 * share)
+            assert r.delivered_tps[i, 0] == pytest.approx(expect, rel=1e-4)
+        # provisioned = halls built × HA nameplate
+        np.testing.assert_allclose(
+            r.provisioned_mw,
+            [int(n) * d.ha_capacity_kw / 1e3
+             for d, n in zip(axes.designs, r.n_halls_built)])
+        np.testing.assert_allclose(
+            r.tps_per_provisioned_w,
+            r.delivered_tps / (r.provisioned_mw[:, None] * 1e6))
+        np.testing.assert_allclose(
+            r.dollars_per_tps,
+            r.total_capex[:, None] / r.delivered_tps)
+
+    def test_stranding_outputs_identical_without_metric_stage(self, res):
+        """`models=()` skips the stage; every simulation output must be
+        bit-identical (the metric stage is strictly post-`_finalize`)."""
+        axes, r = res
+        r0 = sw.sweep(axes, models=())
+        assert r0.delivered_tps.shape == (len(axes), 0)
+        for f in ("p50_stranding", "p90_stranding", "deployed_mw",
+                  "final_lineup_stranding", "n_halls_built",
+                  "final_deployed_mw", "placed_fraction"):
+            np.testing.assert_array_equal(getattr(r0, f), getattr(r, f))
+
+    def test_models_accepted_by_name(self, res):
+        """`models=` takes Table 2 names as well as `MoEModel` objects."""
+        axes, r = res
+        rn = sw.sweep(axes, models=("MoE-132T", "MoE-401T"))
+        assert rn.model_names == ["MoE-132T", "MoE-401T"]
+        cols = [r.model_names.index(n) for n in rn.model_names]
+        np.testing.assert_array_equal(rn.delivered_tps,
+                                      r.delivered_tps[:, cols])
+        np.testing.assert_array_equal(rn.dollars_per_tps,
+                                      r.dollars_per_tps[:, cols])
+
+    def test_mc_sweep_metric_columns(self):
+        r = mcs.mc_sweep(mcs.MCAxes.zip([h.get_design("4N/3")]),
+                         n_trials=4, n_events=120, year=2028,
+                         scenario=proj.HIGH, gpu_power_share=0.6)
+        B, T, M = 1, 4, len(tp.MODEL_SUITE)
+        assert r.delivered_tps.shape == (B, T, M)
+        dep = tp.serving_deployment(2028, proj.HIGH, 1)
+        expect = (tp.tps_per_watt(tp.MODEL_SUITE[2], dep)
+                  * r.deployed_kw[0] * 1e3 * 0.6)
+        np.testing.assert_allclose(r.delivered_tps[0, :, 2], expect,
+                                   rtol=1e-4)
+        assert np.isfinite(r.dollars_per_tps).all()
+        np.testing.assert_allclose(
+            r.tps_per_provisioned_w[0],
+            r.delivered_tps[0] / (r.provisioned_mw[0] * 1e6))
+
+
+class TestFleetTpwRegression:
+    """The old fleet_tpw normalized by deployed MW — which algebraically
+    cancels, reducing the metric to tw·gpu_share regardless of how much
+    built capacity is stranded."""
+
+    ENV = EnvelopeSpec(demand_scale=0.05, gpu_scenario=proj.HIGH,
+                       pod_scale_arch=True)
+
+    def _study(self, deployed_mw, n_halls):
+        cache = {1: SimpleNamespace(effective_dpm=1e7,
+                                    final_deployed_mw=deployed_mw,
+                                    n_halls_built=n_halls)}
+        (pt,) = payoff.pod_payoff_study(
+            h.get_design("4N/3"), [tp.MODELS["MoE-132T"]], pod_sizes=(1,),
+            env=self.ENV, fleet_cache=cache)
+        return pt
+
+    def test_higher_stranding_lowers_fleet_tpw(self):
+        # equal serving gain (same model, same pod size), 10 halls built:
+        # 75 MW deployed = zero stranding; 60 MW = 20% stranded
+        full = self._study(deployed_mw=75.0, n_halls=10)
+        strand = self._study(deployed_mw=60.0, n_halls=10)
+        assert full.fleet_tps_per_watt > strand.fleet_tps_per_watt > 0
+        assert strand.fleet_tps_per_watt == pytest.approx(
+            full.fleet_tps_per_watt * 60.0 / 75.0, rel=1e-9)
+
+    def test_cancellation_is_gone(self):
+        # the old formula equalled tw·gpu_share for ANY deployed MW;
+        # the stranded fleet must now fall below that ceiling
+        strand = self._study(deployed_mw=60.0, n_halls=10)
+        share = sw.gpu_power_share(self.ENV)
+        assert strand.fleet_tps_per_watt < strand.tps_per_watt * share
+        # and an unstranded fleet still attains it exactly
+        full = self._study(deployed_mw=75.0, n_halls=10)
+        assert full.fleet_tps_per_watt == pytest.approx(
+            full.tps_per_watt * share, rel=1e-9)
+
+    def test_nan_when_nothing_built(self):
+        pt = self._study(deployed_mw=0.0, n_halls=0)
+        assert np.isnan(pt.fleet_tps_per_watt)
+
+
+class TestDesignFrontier:
+    def test_pareto_mask(self):
+        perf = np.array([1.0, 2.0, 3.0, 2.0, np.nan])
+        capex = np.array([1.0, 1.0, 2.0, np.nan, 1.0])
+        dom = payoff.pareto_dominated(perf, capex)
+        # 0 beaten by 1; 1 and 2 on the frontier; non-finite always out
+        assert dom.tolist() == [True, False, False, True, True]
+
+    def test_rel_delta_nan_safety(self):
+        assert payoff._rel_delta(2.0, 1.0) == 1.0
+        assert payoff._rel_delta(5.0, 5.0) == 0.0
+        assert np.isnan(payoff._rel_delta(2.0, 0.0))
+        assert np.isnan(payoff._rel_delta(float("nan"), 1.0))
+        assert np.isnan(payoff._rel_delta(2.0, float("inf")))
+
+    def test_design_frontier_grid(self):
+        env = EnvelopeSpec(demand_scale=0.01, gpu_scenario=proj.HIGH)
+        pts = payoff.design_frontier(base_env=env, seeds=(0,),
+                                     models=[tp.MODELS["MoE-132T"]])
+        assert len(pts) == 8                      # 4 designs × {1,5} pods
+        assert {p.tag for p in pts} == {"pod:p1", "pod:p5"}
+        front = [p for p in pts if not p.dominated]
+        assert front, "frontier must be non-empty"
+        # no frontier point may be beaten on both axes by any other point
+        for f in front:
+            for q in pts:
+                better = (q.delivered_tps >= f.delivered_tps
+                          and q.total_capex <= f.total_capex
+                          and (q.delivered_tps > f.delivered_tps
+                               or q.total_capex < f.total_capex))
+                assert not (np.isfinite(q.delivered_tps) and better)
