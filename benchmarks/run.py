@@ -21,7 +21,7 @@ sharded across all visible devices (`sharded_sweep`).  The single-hall
 figs (5–7) run the same way through `repro.core.mc_sweep` — one batched
 call per figure grid.  See benchmarks/README.md for the CSV schema, the
 `--json` perf-trajectory dump, and the `sweep_speedup` / `mc_speedup` /
-`pod_sweep_speedup` acceptance modes.
+`pod_sweep_speedup` / `placement_kernel_speedup` acceptance modes.
 """
 from __future__ import annotations
 
@@ -663,6 +663,59 @@ def mc_pod_speedup():
     emit("mc_pod.speedup", 0,
          f"legacy_over_split={t_legacy / t_split:.2f}x;"
          f"max_dev={dev:.2e}")
+
+
+@bench
+def placement_kernel_speedup():
+    """Acceptance (ISSUE 7): the fused Pallas placement-score kernel
+    behind `use_kernel=True`.
+
+    Always runs the equivalence leg — a pod-heavy single-hall MC grid
+    through the kernel path vs the jnp path, every output column compared
+    (`max_dev` must be 0; on non-TPU hosts the kernel runs in interpret
+    mode).  The timed kernel-vs-jnp ratio is only meaningful where the
+    compiled kernel exists, so on non-TPU backends the ratio row is
+    emitted as `skipped=` (which `tools/check_speedups.py` ignores)."""
+    import jax
+    from repro.core.mc_sweep import MCAxes, mc_sweep
+
+    backend = jax.default_backend()
+    axes = MCAxes.zip(designs=[hierarchy.get_design("10N/8")], seeds=[9])
+    kw = dict(n_trials=2, n_events=60, pod_racks=3, models=())
+    t0 = time.time()
+    a = mc_sweep(axes, **kw)
+    b = mc_sweep(axes, use_kernel=True,
+                 kernel_interpret=backend != "tpu", **kw)
+    dev = max(float(np.abs(np.asarray(getattr(a, f), np.float32)
+                           - np.asarray(getattr(b, f), np.float32)).max())
+              for f in ("lineup_stranding", "hall_stranding", "deployed_kw",
+                        "saturated", "placed_a", "placed_b"))
+    emit("placement_kernel.equivalence", (time.time() - t0) * 1e6,
+         f"max_dev={dev:.2e};bitwise={dev == 0.0};backend={backend}")
+
+    if backend != "tpu":
+        emit("placement_kernel.speedup", 0,
+             f"skipped=non_tpu_backend;backend={backend}")
+        return
+
+    kwt = dict(n_trials=8, n_events=400, pod_racks=3, models=())
+    mc_sweep(axes, **kwt)
+    mc_sweep(axes, use_kernel=True, **kwt)
+
+    def timed(**mode):
+        t0 = time.time()
+        mc_sweep(axes, **mode, **kwt)
+        return time.time() - t0
+
+    reps = [(timed(), timed(use_kernel=True)) for _ in range(2)]
+    t_jnp = min(r[0] for r in reps)
+    t_k = min(r[1] for r in reps)
+    emit("placement_kernel.jnp", t_jnp / kwt["n_trials"] * 1e6,
+         f"wall_s={t_jnp:.2f}")
+    emit("placement_kernel.kernel", t_k / kwt["n_trials"] * 1e6,
+         f"wall_s={t_k:.2f}")
+    emit("placement_kernel.speedup", 0,
+         f"jnp_over_kernel={t_jnp / t_k:.2f}x;max_dev={dev:.2e}")
 
 
 @bench

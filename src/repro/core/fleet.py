@@ -245,7 +245,9 @@ def simulate_lifecycle(jt: JaxTopology, ft: FleetTrace, idx, valid,
                        with_pods: bool = True,
                        legacy_pod_cond: bool = False,
                        pod_scan_len: int = MAX_POD_RACKS,
-                       hd_scan: int | None = None) -> SimOutputs:
+                       hd_scan: int | None = None,
+                       use_kernel: bool = False,
+                       kernel_interpret: bool = False) -> SimOutputs:
     """Run the full monthly lifecycle as a single `lax.scan`.
 
     All positional arguments are device-typed (vmap-able); `harvest`,
@@ -285,6 +287,10 @@ def simulate_lifecycle(jt: JaxTopology, ft: FleetTrace, idx, valid,
       `lax.cond`, evaluating both pod and cluster branches per event
       under `vmap`.  `benchmarks/run.py --only pod_sweep_speedup`
       measures the split-trace win against exactly this path.
+
+    `use_kernel` / `kernel_interpret` (static) route every placement's
+    feasibility + variance score through the fused Pallas kernel
+    (bitwise-identical results; see `placement.place_in_row`).
     """
     H = jt.hall_liq_cap.shape[0]
     E = ft.month.shape[0]
@@ -308,7 +314,8 @@ def simulate_lifecycle(jt: JaxTopology, ft: FleetTrace, idx, valid,
         """One biased attempt over halls < n_try (single-row clusters)."""
         bias = jnp.where(jt.row_hall >= n_act, _NEW_HALL_BIAS, 0.0)
         st_f, ok_f, rows_f, counts_f, row = pl.place_cluster_in_row(
-            jt, st, dep, policy, k, jt.row_hall < n_try, score_bias=bias)
+            jt, st, dep, policy, k, jt.row_hall < n_try, score_bias=bias,
+            use_kernel=use_kernel, interpret=kernel_interpret)
         in_existing = ok_f & (jt.row_hall[jnp.maximum(row, 0)] < n_act)
         n_f = jnp.where(in_existing, n_act, n_try)
         return st_f, ok_f, rows_f, counts_f, n_f
@@ -320,12 +327,15 @@ def simulate_lifecycle(jt: JaxTopology, ft: FleetTrace, idx, valid,
         st1, ok1, rows1, counts1 = pl._place_pod(jt, st, dep, policy, k,
                                                  jt.row_hall < n_act,
                                                  max_racks=pod_scan_len,
-                                                 hd_scan=hd_scan)
+                                                 hd_scan=hd_scan,
+                                                 use_kernel=use_kernel,
+                                                 interpret=kernel_interpret)
 
         def retry():
             st2, ok2, rows2, counts2 = pl._place_pod(
                 jt, st, dep, policy, k, jt.row_hall < n_try,
-                max_racks=pod_scan_len, hd_scan=hd_scan)
+                max_racks=pod_scan_len, hd_scan=hd_scan,
+                use_kernel=use_kernel, interpret=kernel_interpret)
             return st2, ok2, rows2, counts2, n_try
 
         return jax.lax.cond(
@@ -334,7 +344,9 @@ def simulate_lifecycle(jt: JaxTopology, ft: FleetTrace, idx, valid,
     def place_any(st, n_act, dep, k, n_try):
         """Pre-split reference: `place`'s is_pod cond + attempt/retry."""
         def attempt(n):
-            return pl.place(jt, st, dep, policy, k, jt.row_hall < n)
+            return pl.place(jt, st, dep, policy, k, jt.row_hall < n,
+                            use_kernel=use_kernel,
+                            interpret=kernel_interpret)
 
         st1, ok1, rows1, counts1 = attempt(n_act)
 
@@ -450,17 +462,20 @@ def simulate_lifecycle(jt: JaxTopology, ft: FleetTrace, idx, valid,
 @functools.partial(jax.jit,
                    static_argnames=("harvest", "mature_months", "with_pods",
                                     "legacy_pod_cond", "pod_scan_len",
-                                    "hd_scan"))
+                                    "hd_scan", "use_kernel",
+                                    "kernel_interpret"))
 def _simulate_jit(jt, ft, idx, valid, idx_pod, valid_pod, policy, seed,
                   h_cap, n_real, harvest, mature_months, with_pods,
                   legacy_pod_cond=False, pod_scan_len=MAX_POD_RACKS,
-                  hd_scan=None):
+                  hd_scan=None, use_kernel=False, kernel_interpret=False):
     return simulate_lifecycle(jt, ft, idx, valid, idx_pod, valid_pod,
                               policy, seed, h_cap, n_real, harvest=harvest,
                               mature_months=mature_months,
                               with_pods=with_pods,
                               legacy_pod_cond=legacy_pod_cond,
-                              pod_scan_len=pod_scan_len, hd_scan=hd_scan)
+                              pod_scan_len=pod_scan_len, hd_scan=hd_scan,
+                              use_kernel=use_kernel,
+                              kernel_interpret=kernel_interpret)
 
 
 def make_fleet_result(out, months: int, lineups_per_hall: int,
@@ -488,7 +503,9 @@ def make_fleet_result(out, months: int, lineups_per_hall: int,
     )
 
 
-def run_fleet(cfg: FleetConfig, trace: Trace | None = None) -> FleetResult:
+def run_fleet(cfg: FleetConfig, trace: Trace | None = None,
+              use_kernel: bool | None = None,
+              kernel_interpret: bool = False) -> FleetResult:
     """Single-configuration lifecycle (thin wrapper over the scanned
     engine).
 
@@ -505,6 +522,11 @@ def run_fleet(cfg: FleetConfig, trace: Trace | None = None) -> FleetResult:
         cfg: design/envelope/policy/seed bundle (see `FleetConfig`).
         trace: optional pre-generated arrival trace; defaults to
             `generate_fleet_trace(cfg.env, cfg.seed)`.
+        use_kernel: route placement scoring through the fused Pallas
+            kernel (bitwise-identical results); `None` = backend default
+            (`placement.default_use_kernel`: TPU on, CPU off).
+        kernel_interpret: run the kernel in Pallas interpret mode (CPU
+            CI fallback; only meaningful with the kernel path on).
 
     Returns:
         `FleetResult` with monthly [M] trajectories (halls active,
@@ -533,6 +555,8 @@ def run_fleet(cfg: FleetConfig, trace: Trace | None = None) -> FleetResult:
                         mature_months=cfg.mature_months,
                         with_pods=with_pods,
                         pod_scan_len=_pod_scan_len([trace]),
-                        hd_scan=topo.n_hd_rows)
+                        hd_scan=topo.n_hd_rows,
+                        use_kernel=pl.resolve_use_kernel(use_kernel),
+                        kernel_interpret=kernel_interpret)
     return make_fleet_result(out, months, topo.lineups_per_hall,
                              topo.lineup_is_active, design, env)

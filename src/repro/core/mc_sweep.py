@@ -192,21 +192,23 @@ def _mc_trial(jt_c, pol, t_a, t_b, k, *, harvest, with_pods, **statics):
 
 
 _MC_STATICS = ("harvest", "with_pods", "split_pods", "pod_windows",
-               "cluster_starts", "pod_scan_len", "hd_scan")
+               "cluster_starts", "pod_scan_len", "hd_scan", "use_kernel",
+               "kernel_interpret")
 
 
 @functools.partial(jax.jit, static_argnames=_MC_STATICS)
 def _mc_sweep_jit(jt, ta, tb, keys, policy, harvest, with_pods,
                   split_pods=False, pod_windows=(0, 0),
                   cluster_starts=(0, 0), pod_scan_len=pl.MAX_POD_RACKS,
-                  hd_scan=None):
+                  hd_scan=None, use_kernel=False, kernel_interpret=False):
     """vmap `_mc_trial` over (configuration × trial): [B] topology /
     policy axes outer, [B, T] trace/key axes inner."""
     trial = functools.partial(
         _mc_trial, harvest=harvest, with_pods=with_pods,
         split_pods=split_pods, pod_windows=pod_windows,
         cluster_starts=cluster_starts, pod_scan_len=pod_scan_len,
-        hd_scan=hd_scan)
+        hd_scan=hd_scan, use_kernel=use_kernel,
+        kernel_interpret=kernel_interpret)
     per_cfg = jax.vmap(trial, in_axes=(None, None, 0, 0, 0))
     return jax.vmap(per_cfg)(jt, policy, ta, tb, keys)
 
@@ -215,7 +217,7 @@ def _mc_sweep_jit(jt, ta, tb, keys, policy, harvest, with_pods,
 def _mc_sharded_jit(jt, ta, tb, keys, policy, mesh, harvest, with_pods,
                     split_pods=False, pod_windows=(0, 0),
                     cluster_starts=(0, 0), pod_scan_len=pl.MAX_POD_RACKS,
-                    hd_scan=None):
+                    hd_scan=None, use_kernel=False, kernel_interpret=False):
     """Sharded trial batch: operands arrive FLATTENED to one [B·T]
     (config × trial) axis — `sharded_mc_sweep` repeats the per-config
     topology/policy per trial — which a single `vmap` consumes under
@@ -228,7 +230,8 @@ def _mc_sharded_jit(jt, ta, tb, keys, policy, mesh, harvest, with_pods,
         jt_c, pol, t_a, t_b, k, harvest=harvest, with_pods=with_pods,
         split_pods=split_pods, pod_windows=pod_windows,
         cluster_starts=cluster_starts, pod_scan_len=pod_scan_len,
-        hd_scan=hd_scan))
+        hd_scan=hd_scan, use_kernel=use_kernel,
+        kernel_interpret=kernel_interpret))
     sharded = shax.shard_map(fn, mesh=mesh, in_specs=(spec,) * 5,
                              out_specs=spec, check_vma=False)
     return sharded(jt, ta, tb, keys, policy)
@@ -357,7 +360,9 @@ def mc_sweep(axes: MCAxes, n_trials: int = 32, n_events: int = 600,
              quantum_racks: int = 10, la_fraction: float = 0.0,
              harvest: bool = True, single_sku_gpu: bool = False,
              refill_events: int | None = None,
-             legacy_pod_cond: bool = False, models=None) -> MCResult:
+             legacy_pod_cond: bool = False, models=None,
+             use_kernel: bool | None = None,
+             kernel_interpret: bool = False) -> MCResult:
     """Evaluate every single-hall MC configuration in `axes` in one
     compiled call (`n_trials` trials each).
 
@@ -395,13 +400,21 @@ def mc_sweep(axes: MCAxes, n_trials: int = 32, n_events: int = 600,
         models: Table 2 models (objects or names) for the per-trial
             $/performance columns (default `throughput.MODEL_SUITE`;
             `()` skips the stage).
+        use_kernel: route placement scoring through the fused Pallas
+            kernel (static; bitwise-identical results).  `None` = backend
+            default: on for TPU, off elsewhere
+            (`placement.default_use_kernel`).
+        kernel_interpret: run the kernel in Pallas interpret mode (the
+            CPU CI fallback; only meaningful with `use_kernel=True`).
     """
     args, statics = _mc_prepare(axes, n_trials, n_events, year, scenario,
                                 gpu_power_share, pod_racks,
                                 quantum_racks, la_fraction,
                                 single_sku_gpu, refill_events,
                                 legacy_pod_cond)
-    out = _mc_sweep_jit(*args, harvest=harvest, **statics)
+    out = _mc_sweep_jit(*args, harvest=harvest,
+                        use_kernel=pl.resolve_use_kernel(use_kernel),
+                        kernel_interpret=kernel_interpret, **statics)
     return _mc_finalize(out, axes, models=models, year=year,
                         scenario=scenario,
                         gpu_share=1.0 if single_sku_gpu else gpu_power_share,
@@ -416,7 +429,8 @@ def sharded_mc_sweep(axes: MCAxes, n_trials: int = 32, n_events: int = 600,
                      refill_events: int | None = None,
                      legacy_pod_cond: bool = False,
                      devices: Sequence[jax.Device] | None = None,
-                     models=None) -> MCResult:
+                     models=None, use_kernel: bool | None = None,
+                     kernel_interpret: bool = False) -> MCResult:
     """`mc_sweep`, with the (config × trial) batch sharded over devices.
 
     Same 1-D `CONFIG_AXIS` mesh discipline as `sweep.sharded_sweep`, but
@@ -436,7 +450,8 @@ def sharded_mc_sweep(axes: MCAxes, n_trials: int = 32, n_events: int = 600,
               pod_racks=pod_racks, quantum_racks=quantum_racks,
               la_fraction=la_fraction, harvest=harvest,
               single_sku_gpu=single_sku_gpu, refill_events=refill_events,
-              legacy_pod_cond=legacy_pod_cond, models=models)
+              legacy_pod_cond=legacy_pod_cond, models=models,
+              use_kernel=use_kernel, kernel_interpret=kernel_interpret)
     devs = list(devices) if devices is not None else list(jax.devices())
     B, T = len(axes), int(n_trials)
     if len(devs) <= 1 or B * T == 1:
@@ -463,7 +478,9 @@ def sharded_mc_sweep(axes: MCAxes, n_trials: int = 32, n_events: int = 600,
 
     mesh = shax.config_mesh(devs)
     args = jax.device_put(args, NamedSharding(mesh, shax.config_spec()))
-    out = _mc_sharded_jit(*args, harvest=harvest, mesh=mesh, **statics)
+    out = _mc_sharded_jit(*args, harvest=harvest, mesh=mesh,
+                          use_kernel=pl.resolve_use_kernel(use_kernel),
+                          kernel_interpret=kernel_interpret, **statics)
     out = jax.tree.map(
         lambda x: x[:B * T].reshape((B, T) + x.shape[1:]), out)
     return _mc_finalize(out, axes, models=models, year=year,

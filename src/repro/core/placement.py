@@ -33,6 +33,7 @@ import numpy as np
 
 from .hierarchy import HallTopology, MAX_FEEDS
 from .resources import LIQ, N_RES, POWER, TIER_HA, rack_demand
+from ..kernels.placement_score.ops import score_rows as _kernel_score_rows
 
 # Policy ids (paper §4.2).
 POLICY_RANDOM, POLICY_ROUND_ROBIN, POLICY_MIN_WASTE, POLICY_VAR_MIN = 0, 1, 2, 3
@@ -42,6 +43,26 @@ DEFAULT_POLICY = POLICY_VAR_MIN
 MAX_POD_RACKS = 8      # static bound on pod size (paper studies 3–7)
 _BIG = 1e30
 _LD_PREFERENCE = 100.0  # non-GPU racks prefer LD rows (paper §2.2)
+
+# Pallas kernel path (see docs/architecture.md "kernel path").  The row
+# block size trades VMEM footprint against grid steps; 128 rows × 8-lane
+# feed tiles stay far under VMEM for every in-repo topology, and
+# `kernels.placement_score.kernel.placement_score` pads the row axis to
+# a multiple internally, so the value is a tile size, not a constraint.
+DEFAULT_BLOCK_R = 128
+
+
+def default_use_kernel() -> bool:
+    """Kernel dispatch default: on for TPU backends, off elsewhere (the
+    interpreted Pallas path is correct on CPU but slower than jnp; CI
+    exercises it explicitly via `interpret=True`)."""
+    return jax.default_backend() == "tpu"
+
+
+def resolve_use_kernel(use_kernel) -> bool:
+    """Host-level resolution of a `use_kernel` engine flag: `None` means
+    backend default (`default_use_kernel`)."""
+    return default_use_kernel() if use_kernel is None else bool(use_kernel)
 
 
 class JaxTopology(NamedTuple):
@@ -155,23 +176,65 @@ def _row_view(jt: JaxTopology, state: HallState, rows):
             jt.row_nfeeds[rows], jt.row_is_hd[rows], jt.row_hall[rows])
 
 
-def row_feasible(jt: JaxTopology, state: HallState, dep: Deployment,
-                 n_in_row, rows=None) -> jax.Array:
-    """Feasibility mask over rows for placing `n_in_row` racks of `dep`'s
-    SKU into a single row (Eq. 26 over the ancestor path).  With `rows`
-    (int32 row-id subset) the mask covers only those rows — the
-    HD-compacted pod scan's view."""
+def _row_fits(jt: JaxTopology, state: HallState, dep: Deployment,
+              n_in_row, rows=None) -> jax.Array:
+    """Row/hall constraints outside the line-up power condition: the
+    multi-resource row fit, the GPU→HD-row restriction, and the hall
+    liquid plant.  Shared by both `row_feasible` paths — the kernel only
+    owns the feed-gathered power math."""
     n = jnp.asarray(n_in_row, jnp.float32)
     d = rack_demand(dep.rack_kw, dep.is_gpu)          # [N_RES]
     D = n * d
-    P = n * dep.rack_kw
-    r_cap, r_load, r_feeds, r_nfeeds, r_is_hd, r_hall = _row_view(
-        jt, state, rows)
-
+    r_cap, r_load, _, _, r_is_hd, r_hall = _row_view(jt, state, rows)
     fits_row = jnp.all(r_load + D[None, :] <= r_cap + 1e-4, axis=-1)
     hd_ok = jnp.where(dep.is_gpu, r_is_hd, True)
     liq_ok = (state.hall_liq + D[LIQ])[r_hall] <= jt.hall_liq_cap[r_hall] + 1e-4
+    return fits_row & hd_ok & liq_ok
 
+
+def _kernel_feas_scores(jt: JaxTopology, state: HallState, dep: Deployment,
+                        n_in_row, rows=None, interpret: bool = False,
+                        block_r: int = DEFAULT_BLOCK_R):
+    """Fused power-feasibility + variance scores via the Pallas kernel.
+
+    Returns (kernel_feas [R|K] bool, var [R|K] f32).  `kernel_feas` is
+    the power condition AND the row *power* fit — a superset of the full
+    feasibility (`row_feasible` additionally checks the other resources,
+    HD and liquid), so callers AND it with `_row_fits`.  `var` equals
+    the jnp variance score bitwise at every kernel-feasible row and is
+    `kernels.placement_score.kernel.BIG` elsewhere — rows the final
+    feasibility mask sends to `_BIG` anyway."""
+    n = jnp.asarray(n_in_row, jnp.float32)
+    P = n * dep.rack_kw
+    r_cap, r_load, r_feeds, r_nfeeds, _, _ = _row_view(jt, state, rows)
+    return _kernel_score_rows(
+        r_feeds, r_nfeeds, r_cap[:, POWER], state.lineup_ha,
+        state.lineup_tot, jt.lineup_cap, r_load[:, POWER], P, jt.ha_frac,
+        dep.tier == TIER_HA, jt.is_block, block_r=block_r,
+        interpret=interpret)
+
+
+def row_feasible(jt: JaxTopology, state: HallState, dep: Deployment,
+                 n_in_row, rows=None, use_kernel: bool = False,
+                 interpret: bool = False) -> jax.Array:
+    """Feasibility mask over rows for placing `n_in_row` racks of `dep`'s
+    SKU into a single row (Eq. 26 over the ancestor path).  With `rows`
+    (int32 row-id subset) the mask covers only those rows — the
+    HD-compacted pod scan's view.
+
+    `use_kernel=True` (static) computes the line-up power condition with
+    the fused Pallas kernel instead of the jnp gather; the result is
+    bitwise identical (`tests/test_placement_kernel.py`).  `interpret`
+    runs the kernel in Pallas interpret mode (CPU CI)."""
+    extra = _row_fits(jt, state, dep, n_in_row, rows)
+    if use_kernel:
+        kfeas, _ = _kernel_feas_scores(jt, state, dep, n_in_row, rows,
+                                       interpret=interpret)
+        return extra & kfeas
+
+    n = jnp.asarray(n_in_row, jnp.float32)
+    P = n * dep.rack_kw
+    _, _, r_feeds, r_nfeeds, _, _ = _row_view(jt, state, rows)
     valid, _, cap, ha_l, tot_l = _gather_feeds(jt, state, r_feeds)
     nf = jnp.maximum(r_nfeeds, 1).astype(jnp.float32)        # [R|K]
     share = P / nf
@@ -189,15 +252,26 @@ def row_feasible(jt: JaxTopology, state: HallState, dep: Deployment,
     per_feed = jnp.where(jt.is_block, block_ok, dist_ok)
     power_ok = jnp.all(per_feed | ~valid, axis=-1)
 
-    return fits_row & hd_ok & liq_ok & power_ok
+    return extra & power_ok
 
 
 def row_scores(jt: JaxTopology, state: HallState, dep: Deployment,
-               n_in_row, policy, key, rows=None) -> jax.Array:
+               n_in_row, policy, key, rows=None, var=None,
+               use_kernel: bool = False, interpret: bool = False
+               ) -> jax.Array:
     """Per-row placement score (lower is better).  With `rows`, scores are
     the full-row scores gathered at the subset (the random draw is taken
     from the full-`R` grid and the round-robin distance keeps full-`R`
-    row ids), so a compacted argmin matches the full argmin bitwise."""
+    row ids), so a compacted argmin matches the full argmin bitwise.
+
+    `var` (optional, [R|K]) short-circuits the variance-score column —
+    `place_in_row`'s kernel path passes the kernel's fused output so the
+    feed gather runs once.  `use_kernel=True` computes it here via the
+    kernel instead.  Either way the variance column carries the kernel's
+    `BIG` mask at kernel-infeasible rows; callers mask scores by
+    feasibility before the argmin (as `place_in_row` does), so selection
+    is unaffected — standalone callers comparing raw scores against the
+    jnp path should compare at feasible rows."""
     n = jnp.asarray(n_in_row, jnp.float32)
     P = n * dep.rack_kw
     R = jt.row_cap.shape[0]
@@ -213,11 +287,16 @@ def row_scores(jt: JaxTopology, state: HallState, dep: Deployment,
     waste = (r_cap[:, POWER] - r_load[:, POWER] - P) / \
         jnp.maximum(r_cap[:, POWER], 1.0)
 
-    valid, _, cap, ha_l, tot_l = _gather_feeds(jt, state, r_feeds)
-    nf = jnp.maximum(r_nfeeds, 1).astype(jnp.float32)
-    s = (P / nf)[:, None] / jnp.maximum(cap, 1.0)
-    lhat = jnp.where(dep.tier == TIER_HA, ha_l, tot_l) / jnp.maximum(cap, 1.0)
-    var = jnp.sum(jnp.where(valid, 2.0 * lhat * s + s * s, 0.0), axis=-1)
+    if var is None and use_kernel:
+        _, var = _kernel_feas_scores(jt, state, dep, n_in_row, rows,
+                                     interpret=interpret)
+    if var is None:
+        valid, _, cap, ha_l, tot_l = _gather_feeds(jt, state, r_feeds)
+        nf = jnp.maximum(r_nfeeds, 1).astype(jnp.float32)
+        s = (P / nf)[:, None] / jnp.maximum(cap, 1.0)
+        lhat = jnp.where(dep.tier == TIER_HA, ha_l, tot_l) / \
+            jnp.maximum(cap, 1.0)
+        var = jnp.sum(jnp.where(valid, 2.0 * lhat * s + s * s, 0.0), axis=-1)
 
     score = jnp.select(
         [policy == POLICY_RANDOM, policy == POLICY_ROUND_ROBIN,
@@ -247,7 +326,8 @@ def _apply_to_row(jt: JaxTopology, state: HallState, dep: Deployment,
 
 def place_in_row(jt: JaxTopology, state: HallState, dep: Deployment,
                  n_in_row, policy, key, row_active, score_bias=None,
-                 row_subset=None):
+                 row_subset=None, use_kernel: bool = False,
+                 interpret: bool = False):
     """Place `n_in_row` racks into the best feasible active row.
     Returns (state', ok, row).  `score_bias` (per-row, finite, and large
     relative to policy scores) expresses structural preferences among
@@ -258,10 +338,26 @@ def place_in_row(jt: JaxTopology, state: HallState, dep: Deployment,
     the subset and the winning slot maps back to its full row id.  When
     the subset provably contains every feasible row (the HD-compacted pod
     scan: GPU racks are HD-only), the result is bitwise identical to the
-    full scan."""
-    feas = row_feasible(jt, state, dep, n_in_row, rows=row_subset)
-    score = row_scores(jt, state, dep, n_in_row, policy, key,
-                       rows=row_subset)
+    full scan.
+
+    `use_kernel=True` (static) runs ONE fused Pallas kernel call for the
+    line-up power feasibility and the variance score instead of two jnp
+    feed gathers; `interpret` runs it in Pallas interpret mode.  Chosen
+    rows, state updates and `ok` are bitwise identical to the jnp path:
+    kernel feasibility is AND-ed with the identical row/hall constraints,
+    and the kernel's `BIG`-masked variance column only differs at rows
+    the feasibility mask sends to `_BIG` anyway."""
+    if use_kernel:
+        kfeas, kvar = _kernel_feas_scores(jt, state, dep, n_in_row,
+                                          rows=row_subset,
+                                          interpret=interpret)
+        feas = _row_fits(jt, state, dep, n_in_row, rows=row_subset) & kfeas
+        score = row_scores(jt, state, dep, n_in_row, policy, key,
+                           rows=row_subset, var=kvar)
+    else:
+        feas = row_feasible(jt, state, dep, n_in_row, rows=row_subset)
+        score = row_scores(jt, state, dep, n_in_row, policy, key,
+                           rows=row_subset)
     if row_subset is None:
         feas = feas & row_active
         if score_bias is not None:
@@ -280,14 +376,16 @@ def place_in_row(jt: JaxTopology, state: HallState, dep: Deployment,
 
 def place_cluster_in_row(jt: JaxTopology, state: HallState,
                          dep: Deployment, policy, key, row_active,
-                         score_bias=None):
+                         score_bias=None, use_kernel: bool = False,
+                         interpret: bool = False):
     """`place_in_row` for a whole single-row cluster, with its result
     expanded to the `[MAX_POD_RACKS]` rows/counts registry convention
     `place` uses.  Returns (state', ok, rows, counts, row) — the shared
     cluster path of `place`, the fleet scan, and the single-hall
     simulator."""
     st, ok, row = place_in_row(jt, state, dep, dep.n_racks, policy, key,
-                               row_active, score_bias=score_bias)
+                               row_active, score_bias=score_bias,
+                               use_kernel=use_kernel, interpret=interpret)
     rows = jnp.full((MAX_POD_RACKS,), -1, jnp.int32).at[0].set(row)
     counts = jnp.zeros((MAX_POD_RACKS,)).at[0].set(
         jnp.where(ok, dep.n_racks.astype(jnp.float32), 0.0))
@@ -296,7 +394,8 @@ def place_cluster_in_row(jt: JaxTopology, state: HallState,
 
 def _place_pod(jt: JaxTopology, state: HallState, dep: Deployment,
                policy, key, row_active, max_racks: int = MAX_POD_RACKS,
-               hd_scan: int | None = None):
+               hd_scan: int | None = None, use_kernel: bool = False,
+               interpret: bool = False):
     """Place a GPU pod rack-by-rack; all racks must land in the same power
     domain (cross-row cables, paper §4.1); atomic commit.
 
@@ -318,7 +417,9 @@ def _place_pod(jt: JaxTopology, state: HallState, dep: Deployment,
         k = jax.random.fold_in(key, i)
         active = row_active & ((dom < 0) | (jt.row_domain == dom))
         st2, ok, row = place_in_row(jt, st, dep, 1, policy, k, active,
-                                    row_subset=subset)
+                                    row_subset=subset,
+                                    use_kernel=use_kernel,
+                                    interpret=interpret)
         live = i < dep.n_racks
         st = _tree_where(live, st2, st)
         all_ok = all_ok & (ok | ~live)
@@ -337,7 +438,8 @@ def _place_pod(jt: JaxTopology, state: HallState, dep: Deployment,
 
 
 def place(jt: JaxTopology, state: HallState, dep: Deployment, policy, key,
-          row_active=None):
+          row_active=None, use_kernel: bool = False,
+          interpret: bool = False):
     """Place one arrival (cluster or pod).
 
     Returns (state', ok, rows[MAX_POD_RACKS], counts[MAX_POD_RACKS]) where
@@ -349,11 +451,13 @@ def place(jt: JaxTopology, state: HallState, dep: Deployment, policy, key,
 
     def cluster():
         return place_cluster_in_row(jt, state, dep, policy, key,
-                                    row_active)[:4]
+                                    row_active, use_kernel=use_kernel,
+                                    interpret=interpret)[:4]
 
     return jax.lax.cond(
         dep.is_pod,
-        lambda: _place_pod(jt, state, dep, policy, key, row_active),
+        lambda: _place_pod(jt, state, dep, policy, key, row_active,
+                           use_kernel=use_kernel, interpret=interpret),
         cluster,
     )
 

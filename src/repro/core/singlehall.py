@@ -59,7 +59,8 @@ def _fill_phase(jt: JaxTopology, state: HallState, trace: TraceArrays,
                 split_pods: bool = False, pod_window: int = 0,
                 cluster_start: int = 0,
                 pod_scan_len: int = pl.MAX_POD_RACKS,
-                hd_scan: int | None = None) -> TrialResult:
+                hd_scan: int | None = None, use_kernel: bool = False,
+                kernel_interpret: bool = False) -> TrialResult:
     """Place the trace until saturation.  Three static placement modes
     (all bit-identical on the same trace — the split modes just avoid
     tracing work `vmap` would otherwise evaluate for every event):
@@ -84,6 +85,11 @@ def _fill_phase(jt: JaxTopology, state: HallState, trace: TraceArrays,
       computes the batch max/min).  Event order, the saturation streak
       and the per-event `fold_in(key, i)` keys are exactly the legacy
       path's, so results are bit-identical.
+
+    `use_kernel` (static) routes every placement's feasibility + score
+    through the fused Pallas kernel (`placement.place_in_row`), with
+    `kernel_interpret` selecting Pallas interpret mode (CPU CI); results
+    are bitwise identical to the jnp path in every mode.
     """
     E = trace.rack_kw.shape[0]
     R = jt.row_cap.shape[0]
@@ -96,10 +102,13 @@ def _fill_phase(jt: JaxTopology, state: HallState, trace: TraceArrays,
             dep = trace.event(i)
             k = jax.random.fold_in(key, i)
             if with_pods:
-                st2, ok, rows, counts = pl.place(jt, st, dep, policy, k)
+                st2, ok, rows, counts = pl.place(
+                    jt, st, dep, policy, k, use_kernel=use_kernel,
+                    interpret=kernel_interpret)
             else:
                 st2, ok, rows, counts, _ = pl.place_cluster_in_row(
-                    jt, st, dep, policy, k, all_rows)
+                    jt, st, dep, policy, k, all_rows,
+                    use_kernel=use_kernel, interpret=kernel_interpret)
             ok = ok & ~frozen
             st = pl._tree_where(ok, st2, st)
             rows = jnp.where(ok, rows, -1)
@@ -132,10 +141,14 @@ def _fill_phase(jt: JaxTopology, state: HallState, trace: TraceArrays,
 
     def pod_place(st, dep, k):
         return pl._place_pod(jt, st, dep, policy, k, all_rows,
-                             max_racks=pod_scan_len, hd_scan=hd_scan)
+                             max_racks=pod_scan_len, hd_scan=hd_scan,
+                             use_kernel=use_kernel,
+                             interpret=kernel_interpret)
 
     def cluster_place(st, dep, k):
-        return pl.place_cluster_in_row(jt, st, dep, policy, k, all_rows)[:4]
+        return pl.place_cluster_in_row(jt, st, dep, policy, k, all_rows,
+                                       use_kernel=use_kernel,
+                                       interpret=kernel_interpret)[:4]
 
     carry = (state, jnp.zeros((), jnp.int32))
     placed = jnp.zeros((E,), bool)
@@ -183,7 +196,8 @@ def run_trial(jt: JaxTopology, topo_init: HallState,
               split_pods: bool = False,
               pod_windows: tuple = (0, 0), cluster_starts: tuple = (0, 0),
               pod_scan_len: int = pl.MAX_POD_RACKS,
-              hd_scan: int | None = None):
+              hd_scan: int | None = None, use_kernel: bool = False,
+              kernel_interpret: bool = False):
     """One MC trial: fill → harvest → refill.  Returns final state and the
     two phase results.  Every keyword is static (jit static argnames
     upstream): the non-harvest variant never traces the harvest branch,
@@ -191,15 +205,17 @@ def run_trial(jt: JaxTopology, topo_init: HallState,
     `split_pods=True` compiles the split-trace pod fast path —
     `pod_windows` / `cluster_starts` are the (fill, refill) window bounds
     and `pod_scan_len` / `hd_scan` the pod rack-scan trims (see
-    `_fill_phase`)."""
+    `_fill_phase`).  `use_kernel` / `kernel_interpret` route placement
+    scoring through the fused Pallas kernel (bitwise-identical results;
+    see `placement.place_in_row`)."""
     ka, kb = jax.random.split(key)
     res_a = _fill_phase(jt, topo_init, trace_a, policy, ka, with_pods,
                         split_pods, pod_windows[0], cluster_starts[0],
-                        pod_scan_len, hd_scan)
+                        pod_scan_len, hd_scan, use_kernel, kernel_interpret)
     state = _apply_harvest(jt, res_a, trace_a) if harvest else res_a.state
     res_b = _fill_phase(jt, state, trace_b, policy, kb, with_pods,
                         split_pods, pod_windows[1], cluster_starts[1],
-                        pod_scan_len, hd_scan)
+                        pod_scan_len, hd_scan, use_kernel, kernel_interpret)
     return res_b.state, res_a, res_b
 
 
@@ -210,7 +226,9 @@ def monte_carlo(design: DesignSpec, n_trials: int = 32, n_events: int = 600,
                 quantum_racks: int = 10, harvest: bool = True,
                 sku_kw_override: float | None = None,
                 single_sku_gpu: bool = False,
-                legacy_pod_cond: bool = False):
+                legacy_pod_cond: bool = False,
+                use_kernel: bool | None = None,
+                kernel_interpret: bool = False):
     """Run `n_trials` single-hall MC trials.  Returns dict of metrics.
 
     Exact thin wrapper over the batched engine: one-configuration
@@ -232,5 +250,6 @@ def monte_carlo(design: DesignSpec, n_trials: int = 32, n_events: int = 600,
                    scenario=scenario, gpu_power_share=gpu_power_share,
                    pod_racks=pod_racks, quantum_racks=quantum_racks,
                    harvest=harvest, single_sku_gpu=single_sku_gpu,
-                   legacy_pod_cond=legacy_pod_cond)
+                   legacy_pod_cond=legacy_pod_cond, use_kernel=use_kernel,
+                   kernel_interpret=kernel_interpret)
     return res.result(0)

@@ -194,31 +194,38 @@ class SweepResult:
 @functools.partial(jax.jit,
                    static_argnames=("harvest", "mature_months", "with_pods",
                                     "legacy_pod_cond", "pod_scan_len",
-                                    "hd_scan"))
+                                    "hd_scan", "use_kernel",
+                                    "kernel_interpret"))
 def _sweep_jit(jt, ft, idx, valid, idx_pod, valid_pod, policy, seed, h_cap,
                n_real, harvest, mature_months, with_pods,
                legacy_pod_cond=False, pod_scan_len=MAX_POD_RACKS,
-               hd_scan=None):
+               hd_scan=None, use_kernel=False, kernel_interpret=False):
     fn = functools.partial(simulate_lifecycle, harvest=harvest,
                            mature_months=mature_months, with_pods=with_pods,
                            legacy_pod_cond=legacy_pod_cond,
-                           pod_scan_len=pod_scan_len, hd_scan=hd_scan)
+                           pod_scan_len=pod_scan_len, hd_scan=hd_scan,
+                           use_kernel=use_kernel,
+                           kernel_interpret=kernel_interpret)
     return jax.vmap(fn)(jt, ft, idx, valid, idx_pod, valid_pod, policy,
                         seed, h_cap, n_real)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("harvest", "mature_months", "with_pods",
-                                    "pod_scan_len", "hd_scan", "mesh"))
+                                    "pod_scan_len", "hd_scan", "use_kernel",
+                                    "kernel_interpret", "mesh"))
 def _sharded_sweep_jit(jt, ft, idx, valid, idx_pod, valid_pod, policy, seed,
                        h_cap, n_real, harvest, mature_months, with_pods,
-                       pod_scan_len, hd_scan, mesh):
+                       pod_scan_len, hd_scan, use_kernel, kernel_interpret,
+                       mesh):
     """`_sweep_jit` with the configuration axis split over `mesh`: each
     device vmaps only its own B/D slab.  No collectives — configurations
     are independent — so out_specs keep everything config-sharded."""
     fn = functools.partial(simulate_lifecycle, harvest=harvest,
                            mature_months=mature_months, with_pods=with_pods,
-                           pod_scan_len=pod_scan_len, hd_scan=hd_scan)
+                           pod_scan_len=pod_scan_len, hd_scan=hd_scan,
+                           use_kernel=use_kernel,
+                           kernel_interpret=kernel_interpret)
     spec = shax.config_spec()
     sharded = shax.shard_map(jax.vmap(fn), mesh=mesh,
                              in_specs=(spec,) * 10, out_specs=spec,
@@ -417,7 +424,9 @@ def sweep(axes: SweepAxes, harvest: bool = True, mature_months: int = 12,
           n_halls_max: int = 0,
           traces: Sequence[Trace] | None = None,
           legacy_pod_cond: bool = False, models=None,
-          metric_year: int | None = None) -> SweepResult:
+          metric_year: int | None = None,
+          use_kernel: bool | None = None,
+          kernel_interpret: bool = False) -> SweepResult:
     """Evaluate every configuration in `axes` in one compiled call.
 
     All envelopes must share the same buildout horizon (the scan length).
@@ -456,12 +465,19 @@ def sweep(axes: SweepAxes, harvest: bool = True, mature_months: int = 12,
             the stage).
         metric_year: serving-deployment year for the metric stage
             (default: each envelope's `end_year`).
+        use_kernel: route placement scoring through the fused Pallas
+            kernel (static; bitwise-identical results).  `None` = backend
+            default (`placement.default_use_kernel`: TPU on, CPU off).
+        kernel_interpret: run the kernel in Pallas interpret mode (CPU
+            CI fallback; only meaningful with the kernel path on).
     """
     args, months, topos, X_pad, with_pods, pod_len, hd_scan = _prepare(
         axes, n_halls_max, traces, legacy_pod_cond)
     out = _sweep_jit(*args, harvest=harvest, mature_months=mature_months,
                      with_pods=with_pods, legacy_pod_cond=legacy_pod_cond,
-                     pod_scan_len=pod_len, hd_scan=hd_scan)
+                     pod_scan_len=pod_len, hd_scan=hd_scan,
+                     use_kernel=pl.resolve_use_kernel(use_kernel),
+                     kernel_interpret=kernel_interpret)
     return _finalize(out, axes, months, topos, X_pad, mature_months,
                      models=models, metric_year=metric_year)
 
@@ -470,8 +486,9 @@ def sharded_sweep(axes: SweepAxes, harvest: bool = True,
                   mature_months: int = 12, n_halls_max: int = 0,
                   traces: Sequence[Trace] | None = None,
                   devices: Sequence[jax.Device] | None = None,
-                  models=None, metric_year: int | None = None
-                  ) -> SweepResult:
+                  models=None, metric_year: int | None = None,
+                  use_kernel: bool | None = None,
+                  kernel_interpret: bool = False) -> SweepResult:
     """`sweep`, with the configuration axis sharded over a device mesh.
 
     The batch is split along `repro.sharding.axes.CONFIG_AXIS` of a 1-D
@@ -500,7 +517,8 @@ def sharded_sweep(axes: SweepAxes, harvest: bool = True,
     if len(devs) <= 1 or len(axes) == 1:
         return sweep(axes, harvest=harvest, mature_months=mature_months,
                      n_halls_max=n_halls_max, traces=traces, models=models,
-                     metric_year=metric_year)
+                     metric_year=metric_year, use_kernel=use_kernel,
+                     kernel_interpret=kernel_interpret)
 
     args, months, topos, X_pad, with_pods, pod_len, hd_scan = _prepare(
         axes, n_halls_max, traces)
@@ -517,7 +535,9 @@ def sharded_sweep(axes: SweepAxes, harvest: bool = True,
     out = _sharded_sweep_jit(*args, harvest=harvest,
                              mature_months=mature_months,
                              with_pods=with_pods, pod_scan_len=pod_len,
-                             hd_scan=hd_scan, mesh=mesh)
+                             hd_scan=hd_scan,
+                             use_kernel=pl.resolve_use_kernel(use_kernel),
+                             kernel_interpret=kernel_interpret, mesh=mesh)
     if B_pad != B:
         out = jax.tree.map(lambda x: x[:B], out)
     return _finalize(out, axes, months, topos, X_pad, mature_months,

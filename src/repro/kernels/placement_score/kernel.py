@@ -1,19 +1,33 @@
 """Placement feasibility + variance-min scoring Pallas TPU kernel.
 
-The single-hall Monte Carlo study (paper §4.4) evaluates, for every
-candidate row, the distributed-redundancy admission condition (Eq. 1/27)
-and the variance-minimization score — across thousands of vmapped trials.
-This kernel fuses the per-row feed gathers, headroom checks and score
+The Monte Carlo studies (paper §4.4) evaluate, for every candidate row,
+the redundancy admission condition (Eq. 1/2/26/27) and the
+variance-minimization score — inside every scan step of every vmapped
+trial.  This kernel fuses the per-row feed headroom checks and the score
 reduction into one VMEM pass over row blocks.
 
-Inputs are pre-gathered per row (loads/caps per feed, padded with
-`valid=0`): the gather itself is XLA's job; the kernel owns the dense
-math.  Scalars (deployment power P, ha_frac) arrive as a small params
-vector broadcast to every block.
+Inputs are pre-gathered per row (HA/total loads and caps per feed,
+padded with `valid=0`): the gather itself is XLA's job; the kernel owns
+the dense math.  Scalars (deployment power P, ha_frac, tier/topology
+flags) arrive as a small params vector broadcast to every block.
+
+Semantics mirror `core.placement.row_feasible`'s power condition and
+`row_scores`'s variance score term for term (the jnp path is the
+bitwise oracle — see `tests/test_placement_kernel.py`):
+
+* distributed HA:   every feed holds failover headroom
+  ``load_ha + P/(k−1) ≤ ha_frac·C`` AND balanced-share room
+  ``load_tot + P/k ≤ C``  (Eq. 1/27);
+* distributed LA:   ``load_tot + P/k ≤ C`` (may consume reserve);
+* block N+k:        ``load_tot + P ≤ C`` on the single primary (Eq. 2);
+* row power fit:    ``row_load + P ≤ row_cap``;
+* score:            ``Σ_feeds valid·(2·l̂·s + s²)``, ``s = (P/k)/C``,
+  ``l̂`` the HA (HA tier) or total (LA tier) per-feed utilization.
+
+The row grid pads to `block_r` tiles; padded rows are masked infeasible
+(zero-valid feeds, negative row cap) and sliced off before returning.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -22,54 +36,83 @@ from jax.experimental import pallas as pl
 BIG = 1e30
 
 
-def _score_kernel(loads_ref, caps_ref, valid_ref, nf_ref, row_load_ref,
-                  row_cap_ref, params_ref, feas_ref, score_ref):
-    loads = loads_ref[...].astype(jnp.float32)     # [bR, F]
+def _score_kernel(loads_ha_ref, loads_tot_ref, caps_ref, valid_ref, nf_ref,
+                  row_load_ref, row_cap_ref, params_ref, feas_ref,
+                  score_ref):
+    loads_ha = loads_ha_ref[...].astype(jnp.float32)   # [bR, F]
+    loads_tot = loads_tot_ref[...].astype(jnp.float32)
     caps = caps_ref[...].astype(jnp.float32)
     valid = valid_ref[...].astype(jnp.float32)
-    nf = nf_ref[...].astype(jnp.float32)           # [bR]
+    nf = nf_ref[...].astype(jnp.float32)               # [bR]
     row_load = row_load_ref[...].astype(jnp.float32)
     row_cap = row_cap_ref[...].astype(jnp.float32)
     p_dep = params_ref[0]
     ha_frac = params_ref[1]
+    is_ha = params_ref[2]
+    is_block = params_ref[3]
 
-    delta = p_dep / jnp.maximum(nf - 1.0, 1.0)     # Eq. 1
-    head_ok = loads + delta[:, None] <= ha_frac * caps + 1e-4
-    power_ok = jnp.min(jnp.where(valid > 0, head_ok.astype(jnp.float32),
+    share = p_dep / jnp.maximum(nf, 1.0)               # balanced share P/k
+    delta = p_dep / jnp.maximum(nf - 1.0, 1.0)         # failover Δ (Eq. 1)
+    tot_ok = loads_tot + share[:, None] <= caps + 1e-4
+    ha_ok = (loads_ha + delta[:, None] <= ha_frac * caps + 1e-4) & tot_ok
+    block_ok = loads_tot + p_dep <= caps + 1e-4        # quantization (Eq. 2)
+    dist_ok = jnp.where(is_ha > 0, ha_ok, tot_ok)
+    per_feed = jnp.where(is_block > 0, block_ok, dist_ok)
+    power_ok = jnp.min(jnp.where(valid > 0, per_feed.astype(jnp.float32),
                                  1.0), axis=-1)
     fits = (row_load + p_dep <= row_cap + 1e-4).astype(jnp.float32)
     feas = power_ok * fits
 
-    s = (p_dep / jnp.maximum(nf, 1.0))[:, None] / jnp.maximum(caps, 1.0)
-    lhat = loads / jnp.maximum(caps, 1.0)
+    s = share[:, None] / jnp.maximum(caps, 1.0)
+    lhat = jnp.where(is_ha > 0, loads_ha, loads_tot) / jnp.maximum(caps, 1.0)
     var = jnp.sum(valid * (2.0 * lhat * s + s * s), axis=-1)
     feas_ref[...] = feas
     score_ref[...] = jnp.where(feas > 0, var, BIG)
 
 
-def placement_score(loads, caps, valid, nf, row_load, row_cap, params,
-                    block_r: int = 128, interpret: bool = False):
-    """loads/caps/valid: [R, F]; nf/row_load/row_cap: [R]; params: [2]
-    (P_dep, ha_frac).  Returns (feas [R] f32 0/1, score [R] f32)."""
-    R, F = loads.shape
-    bR = min(block_r, R)
-    while R % bR:
-        bR //= 2
-    return pl.pallas_call(
+def placement_score(loads_ha, loads_tot, caps, valid, nf, row_load, row_cap,
+                    params, block_r: int = 128, interpret: bool = False):
+    """loads_ha/loads_tot/caps/valid: [R, F]; nf/row_load/row_cap: [R];
+    params: [4] (P_dep, ha_frac, is_ha, is_block — the flags as 0/1
+    floats).  Returns (feas [R] f32 0/1, score [R] f32; infeasible rows
+    score `BIG`).
+
+    The row axis is padded up to a multiple of ``min(block_r, R)``;
+    padded rows carry zero-valid feeds and a negative row cap, so they
+    come back infeasible and are sliced off before returning — callers
+    never see them win a selection.
+    """
+    R, F = loads_ha.shape
+    bR = max(1, min(block_r, R))
+    R_pad = -(-R // bR) * bR
+    if R_pad != R:
+        n = R_pad - R
+        rowpad = lambda x, fill: jnp.concatenate(
+            [x, jnp.full((n,) + x.shape[1:], fill, x.dtype)])
+        loads_ha = rowpad(loads_ha, 0.0)
+        loads_tot = rowpad(loads_tot, 0.0)
+        caps = rowpad(caps, 1.0)
+        valid = rowpad(valid, 0.0)          # no feeds → power trivially ok…
+        nf = rowpad(nf, jnp.zeros((), nf.dtype))
+        row_load = rowpad(row_load, 0.0)
+        row_cap = rowpad(row_cap, -1.0)     # …but the row itself never fits
+    feas, score = pl.pallas_call(
         _score_kernel,
-        grid=(R // bR,),
+        grid=(R_pad // bR,),
         in_specs=[
             pl.BlockSpec((bR, F), lambda i: (i, 0)),
             pl.BlockSpec((bR, F), lambda i: (i, 0)),
             pl.BlockSpec((bR, F), lambda i: (i, 0)),
+            pl.BlockSpec((bR, F), lambda i: (i, 0)),
             pl.BlockSpec((bR,), lambda i: (i,)),
             pl.BlockSpec((bR,), lambda i: (i,)),
             pl.BlockSpec((bR,), lambda i: (i,)),
-            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((4,), lambda i: (0,)),
         ],
         out_specs=[pl.BlockSpec((bR,), lambda i: (i,)),
                    pl.BlockSpec((bR,), lambda i: (i,))],
-        out_shape=[jax.ShapeDtypeStruct((R,), jnp.float32),
-                   jax.ShapeDtypeStruct((R,), jnp.float32)],
+        out_shape=[jax.ShapeDtypeStruct((R_pad,), jnp.float32),
+                   jax.ShapeDtypeStruct((R_pad,), jnp.float32)],
         interpret=interpret,
-    )(loads, caps, valid, nf, row_load, row_cap, params)
+    )(loads_ha, loads_tot, caps, valid, nf, row_load, row_cap, params)
+    return feas[:R], score[:R]

@@ -1,4 +1,13 @@
-"""Jitted wrapper: builds kernel inputs from a placement state."""
+"""Jitted wrapper: builds kernel inputs from a placement state.
+
+Float32 contract: the kernel computes in float32 (TPU VMEM tiles), and
+the placement engine's jnp oracle also runs in float32 — so the wrapper
+*requires* float32 (or weaker) float inputs.  Callers running under
+`jax.config.update("jax_enable_x64", True)` must down-cast explicitly;
+a silent cast here would let the kernel drift bitwise from an x64
+oracle, which is exactly what the equivalence harness exists to rule
+out.  Integer inputs are converted to int32.
+"""
 from __future__ import annotations
 
 import functools
@@ -9,19 +18,48 @@ import jax.numpy as jnp
 from .kernel import placement_score
 
 
+def _require_f32(name, x):
+    x = jnp.asarray(x)
+    if x.dtype == jnp.float64:
+        raise TypeError(
+            f"score_rows: `{name}` is float64; the placement-score kernel "
+            "computes in float32 (see module docstring). Cast inputs to "
+            "float32 explicitly before calling.")
+    return x.astype(jnp.float32)
+
+
 @functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
 def score_rows(jt_row_feeds, jt_row_nfeeds, jt_row_cap_kw, lineup_ha,
-               lineup_cap, row_load_kw, p_dep, ha_frac,
-               block_r: int = 128, interpret: bool = False):
+               lineup_tot, lineup_cap, row_load_kw, p_dep, ha_frac,
+               is_ha, is_block, block_r: int = 128,
+               interpret: bool = False):
     """Gathers per-feed line-up state and runs the kernel.
-    Returns (feas [R] bool, score [R])."""
+
+    `jt_row_feeds` may be a compacted subset view ([K, F] gathered at
+    `hd_index[:K]`, with the other row arrays gathered to match) — the
+    kernel itself is agnostic to row identity.  `is_ha`/`is_block` are
+    0/1 flags (traced; deployment tier and topology family).  Returns
+    (feas [R] bool, score [R] f32; infeasible rows score `kernel.BIG`).
+    """
+    jt_row_feeds = jnp.asarray(jt_row_feeds, jnp.int32)
+    jt_row_nfeeds = jnp.asarray(jt_row_nfeeds, jnp.int32)
+    jt_row_cap_kw = _require_f32("jt_row_cap_kw", jt_row_cap_kw)
+    lineup_ha = _require_f32("lineup_ha", lineup_ha)
+    lineup_tot = _require_f32("lineup_tot", lineup_tot)
+    lineup_cap = _require_f32("lineup_cap", lineup_cap)
+    row_load_kw = _require_f32("row_load_kw", row_load_kw)
+    p_dep = _require_f32("p_dep", p_dep)
+    ha_frac = _require_f32("ha_frac", ha_frac)
+
     valid = (jt_row_feeds >= 0).astype(jnp.float32)
     safe = jnp.where(jt_row_feeds >= 0, jt_row_feeds, 0)
-    loads = lineup_ha[safe]
+    loads_ha = lineup_ha[safe]
+    loads_tot = lineup_tot[safe]
     caps = lineup_cap[safe]
-    params = jnp.stack([jnp.asarray(p_dep, jnp.float32),
-                        jnp.asarray(ha_frac, jnp.float32)])
+    params = jnp.stack([p_dep, ha_frac,
+                        jnp.asarray(is_ha, jnp.float32).reshape(()),
+                        jnp.asarray(is_block, jnp.float32).reshape(())])
     feas, score = placement_score(
-        loads, caps, valid, jt_row_nfeeds, row_load_kw, jt_row_cap_kw,
-        params, block_r=block_r, interpret=interpret)
+        loads_ha, loads_tot, caps, valid, jt_row_nfeeds, row_load_kw,
+        jt_row_cap_kw, params, block_r=block_r, interpret=interpret)
     return feas > 0, score

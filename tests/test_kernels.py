@@ -81,43 +81,113 @@ class TestMoEGating:
                                    np.ones(N), atol=1e-5)
 
 
+def _placement_score_inputs(R, F, seed=0, p_dep=150.0, ha_frac=0.75,
+                            is_ha=1.0, is_block=0.0):
+    """Random [R, F] feed-gathered kernel inputs (params v2 layout)."""
+    ks = jax.random.split(jax.random.fold_in(KEY, 1000 * seed + R), 4)
+    loads_ha = jax.random.uniform(ks[0], (R, F)) * 1800
+    loads_tot = loads_ha + jax.random.uniform(ks[3], (R, F)) * 400
+    caps = jnp.full((R, F), 2500.0)
+    valid = (jax.random.uniform(ks[1], (R, F)) > 0.3).astype(jnp.float32)
+    nf = jnp.maximum(valid.sum(-1), 1)
+    row_load = jax.random.uniform(ks[2], (R,)) * 500
+    row_cap = jnp.full((R,), 625.0)
+    params = jnp.array([p_dep, ha_frac, is_ha, is_block], jnp.float32)
+    return loads_ha, loads_tot, caps, valid, nf, row_load, row_cap, params
+
+
 class TestPlacementScore:
     @pytest.mark.parametrize("R,F", [(64, 4), (30, 4), (128, 2)])
-    def test_vs_oracle(self, R, F):
+    @pytest.mark.parametrize("is_ha,is_block",
+                             [(1.0, 0.0), (0.0, 0.0), (1.0, 1.0)])
+    def test_vs_oracle(self, R, F, is_ha, is_block):
         from repro.kernels.placement_score.kernel import placement_score
         from repro.kernels.placement_score.ref import reference_score
-        ks = jax.random.split(jax.random.fold_in(KEY, R), 3)
-        loads = jax.random.uniform(ks[0], (R, F)) * 2000
-        caps = jnp.full((R, F), 2500.0)
-        valid = (jax.random.uniform(ks[1], (R, F)) > 0.3).astype(jnp.float32)
-        nf = jnp.maximum(valid.sum(-1), 1)
-        row_load = jax.random.uniform(ks[2], (R,)) * 500
-        row_cap = jnp.full((R,), 625.0)
-        params = jnp.array([150.0, 0.75])
-        f1, s1 = placement_score(loads, caps, valid, nf, row_load, row_cap,
-                                 params, block_r=32, interpret=True)
-        f2, s2 = reference_score(loads, caps, valid, nf, row_load, row_cap,
-                                 params)
+        args = _placement_score_inputs(R, F, is_ha=is_ha, is_block=is_block)
+        f1, s1 = placement_score(*args, block_r=32, interpret=True)
+        f2, s2 = reference_score(*args)
+        np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+
+    @pytest.mark.parametrize("block_r", [8, 32, 128])
+    @pytest.mark.parametrize("R", [7, 33, 127])
+    def test_block_r_padding_sweep(self, block_r, R):
+        """Odd row counts against every tile size: the internal padding
+        (rows masked infeasible, outputs sliced back to R) must be exact
+        for every remainder pattern."""
+        from repro.kernels.placement_score.kernel import placement_score
+        from repro.kernels.placement_score.ref import reference_score
+        args = _placement_score_inputs(R, 4, seed=block_r)
+        f1, s1 = placement_score(*args, block_r=block_r, interpret=True)
+        assert f1.shape == s1.shape == (R,)
+        f2, s2 = reference_score(*args)
         np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
         np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
 
     def test_matches_placement_engine(self):
-        """Kernel semantics agree with core.placement on a distributed hall
-        (power-feasibility sub-condition + var-min score)."""
+        """`score_rows` + the row/hall constraints reproduce
+        `row_feasible` exactly on a distributed hall, and the public
+        `use_kernel=True` dispatch is bitwise the jnp path."""
         from repro.core import hierarchy as h, placement as pl
         from repro.kernels.placement_score.ops import score_rows
         topo = h.build_topology(h.design_10n8())
         jt = pl.jax_topology(topo)
         st = pl.init_state(topo)._replace(
             lineup_ha=jnp.linspace(0, 1900, 10))
+        st = st._replace(lineup_tot=st.lineup_ha)
         p_dep = 300.0
         feas_k, _ = score_rows(jt.row_feeds, jt.row_nfeeds,
                                jt.row_cap[:, 0], st.lineup_ha,
-                               jt.lineup_cap, st.row_load[:, 0],
-                               p_dep, topo.ha_frac, interpret=True)
+                               st.lineup_tot, jt.lineup_cap,
+                               st.row_load[:, 0], p_dep, topo.ha_frac,
+                               True, jt.is_block, interpret=True)
         dep = pl.Deployment.make(p_dep, 1, is_gpu=False)
-        feas_full = pl.row_feasible(jt, st._replace(
-            lineup_tot=st.lineup_ha), dep, 1)
-        # engine adds HD/LD + cooling rules; kernel covers power headroom —
-        # engine-feasible ⇒ kernel-feasible
+        feas_full = pl.row_feasible(jt, st, dep, 1)
+        # engine adds HD/LD + cooling rules; kernel covers the power
+        # condition — engine-feasible ⇒ kernel-feasible
         assert bool((~np.asarray(feas_full) | np.asarray(feas_k)).all())
+        feas_disp = pl.row_feasible(jt, st, dep, 1, use_kernel=True,
+                                    interpret=True)
+        np.testing.assert_array_equal(np.asarray(feas_full),
+                                      np.asarray(feas_disp))
+
+    def test_all_feeds_invalid(self):
+        """Rows whose every `jt_row_feeds` entry is −1 (zero-capacity
+        sweep-padding rows): the power condition is vacuous, the row fit
+        decides, the variance score is exactly 0 — no NaN/garbage."""
+        from repro.kernels.placement_score.kernel import BIG
+        from repro.kernels.placement_score.ops import score_rows
+        R, F, X = 16, 4, 6
+        feeds = jnp.full((R, F), -1, jnp.int32)
+        nfeeds = jnp.zeros((R,), jnp.int32)
+        zeros_x = jnp.zeros((X,), jnp.float32)
+        caps_x = jnp.full((X,), 2500.0)
+        row_cap = jnp.full((R,), 625.0)
+        row_load = jnp.zeros((R,), jnp.float32)
+        feas, score = score_rows(feeds, nfeeds, row_cap, zeros_x, zeros_x,
+                                 caps_x, row_load, 150.0, 0.75, True, False,
+                                 block_r=8, interpret=True)
+        assert bool(np.asarray(feas).all())
+        np.testing.assert_array_equal(np.asarray(score), np.zeros((R,)))
+        # and with the deployment overflowing the row: cleanly infeasible
+        feas2, score2 = score_rows(feeds, nfeeds, row_cap, zeros_x, zeros_x,
+                                   caps_x, row_load, 1000.0, 0.75, True,
+                                   False, block_r=8, interpret=True)
+        assert not bool(np.asarray(feas2).any())
+        np.testing.assert_array_equal(np.asarray(score2),
+                                      np.full((R,), BIG, np.float32))
+
+    def test_rejects_float64_inputs(self):
+        """x64 callers get a clear error, not silent downcast drift (the
+        float32 contract in `placement_score/ops.py`)."""
+        from jax.experimental import enable_x64
+        from repro.kernels.placement_score.ops import score_rows
+        R, F, X = 8, 2, 4
+        feeds = np.zeros((R, F), np.int32)
+        nfeeds = np.full((R,), F, np.int32)
+        with enable_x64():
+            args = [feeds, nfeeds, np.full((R,), 625.0),
+                    np.zeros((X,)), np.zeros((X,)), np.full((X,), 2500.0),
+                    np.zeros((R,)), 150.0, 0.75, True, False]
+            with pytest.raises(TypeError, match="float64"):
+                score_rows(*args, interpret=True)
