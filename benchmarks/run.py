@@ -28,6 +28,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import resource
 import subprocess
 import sys
 import time
@@ -37,8 +38,8 @@ from typing import Dict
 import numpy as np
 
 from repro.core import (arrivals, cost, fleet, hierarchy, payoff,
-                        placement, projections as proj, singlehall,
-                        throughput as tp)
+                        placement, projections as proj, quantiles as qt,
+                        singlehall, throughput as tp)
 from repro.core.arrivals import EnvelopeSpec, generate_fleet_trace
 from repro.core.fleet import FleetConfig, run_fleet
 from repro.core.mc_sweep import MCAxes, sharded_mc_sweep
@@ -48,6 +49,7 @@ REGISTRY = {}
 _FLEET_CACHE: Dict[tuple, fleet.FleetResult] = {}
 _ROWS: Dict[str, dict] = {}
 SCALE = 0.04
+SMOKE = False
 
 
 def bench(fn):
@@ -719,6 +721,114 @@ def placement_kernel_speedup():
 
 
 @bench
+def giant_grid():
+    """Acceptance (ISSUE 8): a planet-scale configuration grid — 10⁴
+    lifecycles (512 under ``--smoke``) — through the streaming-quantile
+    scan (`exact_quantiles=False`) with chunked sharded dispatch.
+
+    The grid reuses a small (scenario × seed) trace pool across all
+    configurations (`traces=`; traces depend only on the envelope and
+    seed) and a shortened buildout horizon, so grid SIZE — not trace
+    synthesis or horizon length — is what the run exercises.  Chunked
+    dispatch (`chunk_size`) bounds live memory at one chunk whatever the
+    grid size; every chunk shares one compiled executable.
+
+    Rows:
+    * ``giant_grid.stream`` — configs/s throughput and peak RSS of the
+      streaming chunked run.
+    * ``giant_grid.equivalence`` — streaming p50/p90 vs the exact
+      post-hoc reduction on a sub-grid; must stay within one histogram
+      bin (1/`quantiles.DEFAULT_BINS`).
+    * ``giant_grid.mem_speedup`` — per-configuration XLA temp-buffer
+      ratio exact/streaming from `compiled.memory_analysis()` (a
+      deterministic compiler quantity, unlike 1-core wall-time ratios;
+      gated ≥ 1.0 by tools/check_speedups.py, `skipped=` where the
+      backend exposes no memory analysis).  The streaming scan carries
+      no ``[M, H]`` stranding history, so its temp footprint is flat in
+      the horizon while the exact path's grows with it.
+    """
+    n_cfg = 512 if SMOKE else 10_000
+    chunk = 128 if SMOKE else 512
+    pool = [(sc, sd) for sc in (proj.MED, proj.HIGH)
+            for sd in (41, 42, 43, 44)]
+    envs_pool = [EnvelopeSpec(demand_scale=0.01, gpu_scenario=sc,
+                              end_year=2028) for sc, _ in pool]
+    traces_pool = [generate_fleet_trace(e, sd)
+                   for e, (_, sd) in zip(envs_pool, pool)]
+    dnames = ("4N/3", "3+1")
+    idx = [i % len(pool) for i in range(n_cfg)]
+    axes = SweepAxes.zip(
+        designs=[hierarchy.get_design(dnames[i % 2]) for i in range(n_cfg)],
+        envs=[envs_pool[j] for j in idx],
+        seeds=[pool[j][1] for j in idx])
+    traces = [traces_pool[j] for j in idx]
+
+    t0 = time.time()
+    res = sharded_sweep(axes, traces=traces, exact_quantiles=False,
+                        chunk_size=chunk)
+    wall = time.time() - t0
+    rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    emit("giant_grid.stream", wall / n_cfg * 1e6,
+         f"n_cfg={n_cfg};chunk={chunk};wall_s={wall:.1f};"
+         f"cfg_per_s={n_cfg / wall:.0f};peak_rss_mb={rss_mb:.0f}")
+
+    # streaming vs exact on a sub-grid covering every (design, trace)
+    # combination in the big grid
+    n_sub = 16
+    sub = SweepAxes.zip(designs=axes.designs[:n_sub],
+                        envs=axes.envs[:n_sub], seeds=axes.seeds[:n_sub])
+    exact = sweep(sub, traces=traces[:n_sub])
+    tol = 1.0 / qt.DEFAULT_BINS + 1e-6
+    dev = 0.0
+    for attr in ("p50_stranding", "p90_stranding"):
+        e = np.asarray(getattr(exact, attr))
+        s = np.asarray(getattr(res, attr))[:n_sub]
+        assert (np.isnan(e) == np.isnan(s)).all()
+        ok = ~np.isnan(e)
+        dev = max(dev, float(np.abs(s[ok] - e[ok]).max()))
+    emit("giant_grid.equivalence", 0,
+         f"n_sub={n_sub};max_dev={dev:.2e};"
+         f"bin_width={1.0 / qt.DEFAULT_BINS:.2e};pass={dev <= tol}")
+
+    # the temp-memory probe uses a small full-horizon grid with a
+    # planet-scale static hall cap: the exact path's per-config [M, H]
+    # stranding/activation histories are what the streaming scan
+    # removes, and their temp-buffer cost shows up in the compiled
+    # program's memory analysis (the measured exact−stream delta equals
+    # the history bytes; the rest of the temp footprint is shared)
+    probe_hmax = 128
+    probe_env = EnvelopeSpec(demand_scale=0.01, gpu_scenario=proj.HIGH)
+    probe = SweepAxes.zip(
+        designs=[hierarchy.get_design(d) for d in dnames],
+        envs=[probe_env], seeds=[41, 42])
+
+    def temp_bytes(exact_q):
+        from repro.core.sweep import _prepare, _sweep_jit
+        args, *_, with_pods, pod_len, hd_scan = _prepare(
+            probe, probe_hmax, None)
+        compiled = _sweep_jit.lower(
+            *args, harvest=True, mature_months=12, with_pods=with_pods,
+            legacy_pod_cond=False, pod_scan_len=pod_len, hd_scan=hd_scan,
+            use_kernel=placement.resolve_use_kernel(None),
+            kernel_interpret=False, exact_quantiles=exact_q,
+            quantile_bins=None).compile()
+        return int(compiled.memory_analysis().temp_size_in_bytes)
+
+    try:
+        b_ex, b_st = temp_bytes(True), temp_bytes(False)
+        emit("giant_grid.mem_speedup", 0,
+             f"exact_over_stream_temp={b_ex / max(b_st, 1):.2f}x;"
+             f"exact_temp_mb={b_ex / 1e6:.2f};"
+             f"stream_temp_mb={b_st / 1e6:.2f};"
+             f"history_mb={(b_ex - b_st) / 1e6:.2f};"
+             f"n_cfg={len(probe)};n_halls_max={probe_hmax}")
+    except Exception as e:   # backend without memory_analysis
+        emit("giant_grid.mem_speedup", 0,
+             f"skipped=memory_analysis_unavailable;"
+             f"err={type(e).__name__}")
+
+
+@bench
 def scenario_sweep():
     """Beyond-the-paper scenario frontier (docs/scenarios.md): baseline +
     all four scenario families (demand shocks, correlated cohorts,
@@ -802,10 +912,13 @@ def fig2_overview():
 
 
 def main(argv=None):
-    global SCALE
+    global SCALE, SMOKE
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--scale", type=float, default=0.04)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced-size giant_grid (512 configs; the CI "
+                         "acceptance gate) instead of the full 10^4")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write {name: {us_per_call, derived}} for "
                          "every emitted row to PATH (machine-readable "
@@ -815,6 +928,7 @@ def main(argv=None):
                          "sweep_speedup (expects forced host devices)")
     args = ap.parse_args(argv)
     SCALE = args.scale
+    SMOKE = args.smoke
     if args.sharded_probe:
         _sharded_probe(min(SCALE, 0.01))
         return

@@ -3,8 +3,8 @@ for the AI Era": hierarchy/redundancy modelling, multi-resource placement,
 single-hall and fleet lifecycle simulation, cost and throughput models."""
 
 from . import (arrivals, calibration, cost, fleet, hierarchy, mc_sweep,
-               payoff, placement, projections, resources, scenarios,
-               singlehall, sweep, throughput)
+               payoff, placement, projections, quantiles, resources,
+               scenarios, singlehall, sweep, throughput)
 from .hierarchy import (DESIGNS, DesignSpec, build_topology, design_3p1,
                         design_4n3, design_8p2, design_10n8, get_design)
 from .placement import (DEFAULT_POLICY, POLICY_MIN_WASTE, POLICY_NAMES,
@@ -15,8 +15,8 @@ from .sweep import SweepAxes, SweepResult
 
 __all__ = [
     "arrivals", "calibration", "cost", "fleet", "hierarchy", "mc_sweep",
-    "payoff", "placement", "projections", "resources", "scenarios",
-    "singlehall", "sweep", "throughput",
+    "payoff", "placement", "projections", "quantiles", "resources",
+    "scenarios", "singlehall", "sweep", "throughput",
     "DESIGNS", "DesignSpec", "build_topology", "get_design",
     "design_4n3", "design_3p1", "design_10n8", "design_8p2",
     "Deployment", "HallState", "place", "DEFAULT_POLICY", "POLICY_NAMES",

@@ -7,8 +7,11 @@ decommissions racks at end-of-life.
 
 The whole lifecycle is ONE `jax.lax.scan` over months: hall-activation
 bookkeeping (`act_month`) lives in the scan carry, and the per-month
-p50/p90 stranding stats are post-hoc reductions over the scanned
-history.  `simulate_lifecycle` takes only device-typed arguments, so
+p50/p90 stranding stats are either post-hoc reductions over the scanned
+`[M, H]` history (`exact_quantiles=True`, the default and regression
+reference) or O(1)-memory streaming histogram estimates computed inside
+the scan body (`exact_quantiles=False`, see `repro.core.quantiles`).
+`simulate_lifecycle` takes only device-typed arguments, so
 `sweep.py` can `vmap` it over a batch of (design, scenario, policy,
 seed) configurations; `run_fleet` is the thin single-configuration
 wrapper that preserves the original `FleetResult` interface.
@@ -23,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import cost, placement as pl
+from . import cost, placement as pl, quantiles as qt
 from .arrivals import EnvelopeSpec, Trace, generate_fleet_trace
 from .hierarchy import DesignSpec, build_topology
 from .placement import (DEFAULT_POLICY, Deployment, JaxTopology,
@@ -223,8 +226,11 @@ class SimOutputs(NamedTuple):
 
 def _masked_percentiles(x, mask, qs):
     """np.percentile('linear') over x[mask] for each static q in `qs`
-    (one shared sort); needs ≥1 masked element."""
+    (one shared sort); an all-False mask yields NaN (the undefined
+    quantile's explicit sentinel — it used to leak the +inf sort
+    padding instead)."""
     s = jnp.sort(jnp.where(mask, x, jnp.inf))
+    nonempty = jnp.any(mask)
     top = (jnp.maximum(jnp.sum(mask), 1) - 1).astype(jnp.float32)
     out = []
     for q in qs:
@@ -232,8 +238,17 @@ def _masked_percentiles(x, mask, qs):
         lo = jnp.floor(pos).astype(jnp.int32)
         hi = jnp.ceil(pos).astype(jnp.int32)
         frac = pos - lo.astype(jnp.float32)
-        out.append(s[lo] * (1.0 - frac) + s[hi] * frac)
+        out.append(jnp.where(nonempty,
+                             s[lo] * (1.0 - frac) + s[hi] * frac,
+                             jnp.nan))
     return tuple(out)
+
+
+def _mature_mask(am, m, mature_months):
+    """Which halls enter month `m`'s tail stats: active halls older than
+    `mature_months`, falling back to all active halls while none are."""
+    mature = (am >= 0) & (am <= m - mature_months)
+    return jnp.where(jnp.any(mature), mature, am >= 0)
 
 
 _NEW_HALL_BIAS = 1e6   # keeps placements in existing halls when feasible
@@ -247,7 +262,9 @@ def simulate_lifecycle(jt: JaxTopology, ft: FleetTrace, idx, valid,
                        pod_scan_len: int = MAX_POD_RACKS,
                        hd_scan: int | None = None,
                        use_kernel: bool = False,
-                       kernel_interpret: bool = False) -> SimOutputs:
+                       kernel_interpret: bool = False,
+                       exact_quantiles: bool = True,
+                       quantile_bins: int | None = None) -> SimOutputs:
     """Run the full monthly lifecycle as a single `lax.scan`.
 
     All positional arguments are device-typed (vmap-able); `harvest`,
@@ -291,11 +308,27 @@ def simulate_lifecycle(jt: JaxTopology, ft: FleetTrace, idx, valid,
     `use_kernel` / `kernel_interpret` (static) route every placement's
     feasibility + variance score through the fused Pallas kernel
     (bitwise-identical results; see `placement.place_in_row`).
+
+    `exact_quantiles` (static) selects the p50/p90 stranding path:
+
+    * `True` (default, the regression reference — the `legacy_pod_cond`
+      pattern): the scan emits the full `[M, H]` stranding/activation
+      history and the percentiles are post-hoc `_masked_percentiles`
+      reductions — exact, but O(M·H) memory per configuration.
+    * `False` (streaming): each month's `[H]` stranding cross-section is
+      folded into a `quantile_bins`-bucket histogram estimate *inside
+      the scan body* (`quantiles.hist_masked_quantiles`), so the scan
+      emits two scalars per month and no `[M, H]` history is ever
+      materialized — O(1) stats memory per configuration, absolute
+      error ≤ `1 / quantile_bins` (default `quantiles.DEFAULT_BINS`,
+      512 → ≤ 0.2%).  This is the path giant grids compile
+      (`benchmarks/run.py --only giant_grid`).
     """
     H = jt.hall_liq_cap.shape[0]
     E = ft.month.shape[0]
     M = idx.shape[0]
     split_pods = with_pods and not legacy_pod_cond
+    n_bins = quantile_bins or qt.DEFAULT_BINS
 
     state = pl.init_state_from(jt)
     reg_rows = jnp.full((E, MAX_POD_RACKS), -1, jnp.int32)
@@ -426,26 +459,34 @@ def simulate_lifecycle(jt: JaxTopology, ft: FleetTrace, idx, valid,
             (act_month < 0) & (jnp.arange(H) < n_active), m, act_month)
         carry = (state, reg_rows, reg_counts, placed, harvested, removed,
                  n_active, act_month)
-        return carry, (n_active, pl.deployed_kw(state),
-                       pl.hall_stranding(jt, state), act_month)
+        hs_m = pl.hall_stranding(jt, state)
+        if exact_quantiles:
+            ys = (hs_m, act_month)
+        else:
+            ys = qt.hist_masked_quantiles(
+                hs_m, _mature_mask(act_month, m, mature_months),
+                (50.0, 90.0), n_bins=n_bins)
+        return carry, (n_active, pl.deployed_kw(state)) + ys
 
     carry0 = (state, reg_rows, reg_counts, placed, harvested, removed,
               n_active, act_month)
     xs = (jnp.arange(M, dtype=jnp.int32), jnp.asarray(idx),
           jnp.asarray(valid), jnp.asarray(idx_pod),
           jnp.asarray(valid_pod))
-    carry, (halls, deployed, hs_hist, am_hist) = jax.lax.scan(
+    carry, (halls, deployed, y3, y4) = jax.lax.scan(
         month_step, carry0, xs)
     state, placed = carry[0], carry[3]
 
-    # ---- post-hoc percentile reductions over the scanned history ----
-    def stats(hs, am, m):
-        mature = (am >= 0) & (am <= m - mature_months)
-        mask = jnp.where(jnp.any(mature), mature, am >= 0)
-        return _masked_percentiles(hs, mask, (50.0, 90.0))
+    if exact_quantiles:
+        # ---- post-hoc percentile reductions over the scanned history ----
+        def stats(hs, am, m):
+            return _masked_percentiles(
+                hs, _mature_mask(am, m, mature_months), (50.0, 90.0))
 
-    p50, p90 = jax.vmap(stats)(hs_hist, am_hist,
-                               jnp.arange(M, dtype=jnp.int32))
+        p50, p90 = jax.vmap(stats)(y3, y4,
+                                   jnp.arange(M, dtype=jnp.int32))
+    else:
+        p50, p90 = y3, y4
 
     # padding events are never placed, so the sum counts only real events
     pf = jnp.sum(placed.astype(jnp.float32)) / \
@@ -463,11 +504,13 @@ def simulate_lifecycle(jt: JaxTopology, ft: FleetTrace, idx, valid,
                    static_argnames=("harvest", "mature_months", "with_pods",
                                     "legacy_pod_cond", "pod_scan_len",
                                     "hd_scan", "use_kernel",
-                                    "kernel_interpret"))
+                                    "kernel_interpret", "exact_quantiles",
+                                    "quantile_bins"))
 def _simulate_jit(jt, ft, idx, valid, idx_pod, valid_pod, policy, seed,
                   h_cap, n_real, harvest, mature_months, with_pods,
                   legacy_pod_cond=False, pod_scan_len=MAX_POD_RACKS,
-                  hd_scan=None, use_kernel=False, kernel_interpret=False):
+                  hd_scan=None, use_kernel=False, kernel_interpret=False,
+                  exact_quantiles=True, quantile_bins=None):
     return simulate_lifecycle(jt, ft, idx, valid, idx_pod, valid_pod,
                               policy, seed, h_cap, n_real, harvest=harvest,
                               mature_months=mature_months,
@@ -475,7 +518,9 @@ def _simulate_jit(jt, ft, idx, valid, idx_pod, valid_pod, policy, seed,
                               legacy_pod_cond=legacy_pod_cond,
                               pod_scan_len=pod_scan_len, hd_scan=hd_scan,
                               use_kernel=use_kernel,
-                              kernel_interpret=kernel_interpret)
+                              kernel_interpret=kernel_interpret,
+                              exact_quantiles=exact_quantiles,
+                              quantile_bins=quantile_bins)
 
 
 def make_fleet_result(out, months: int, lineups_per_hall: int,
@@ -505,7 +550,9 @@ def make_fleet_result(out, months: int, lineups_per_hall: int,
 
 def run_fleet(cfg: FleetConfig, trace: Trace | None = None,
               use_kernel: bool | None = None,
-              kernel_interpret: bool = False) -> FleetResult:
+              kernel_interpret: bool = False,
+              exact_quantiles: bool = True,
+              quantile_bins: int | None = None) -> FleetResult:
     """Single-configuration lifecycle (thin wrapper over the scanned
     engine).
 
@@ -527,6 +574,12 @@ def run_fleet(cfg: FleetConfig, trace: Trace | None = None,
             (`placement.default_use_kernel`: TPU on, CPU off).
         kernel_interpret: run the kernel in Pallas interpret mode (CPU
             CI fallback; only meaningful with the kernel path on).
+        exact_quantiles: `True` (default) computes p50/p90 stranding as
+            the exact post-hoc reduction over the `[M, H]` history;
+            `False` compiles the O(1)-memory streaming histogram path
+            (error ≤ `1 / quantile_bins`; see `simulate_lifecycle`).
+        quantile_bins: streaming-histogram resolution (default
+            `quantiles.DEFAULT_BINS`); ignored when exact.
 
     Returns:
         `FleetResult` with monthly [M] trajectories (halls active,
@@ -557,6 +610,8 @@ def run_fleet(cfg: FleetConfig, trace: Trace | None = None,
                         pod_scan_len=_pod_scan_len([trace]),
                         hd_scan=topo.n_hd_rows,
                         use_kernel=pl.resolve_use_kernel(use_kernel),
-                        kernel_interpret=kernel_interpret)
+                        kernel_interpret=kernel_interpret,
+                        exact_quantiles=exact_quantiles,
+                        quantile_bins=quantile_bins)
     return make_fleet_result(out, months, topo.lineups_per_hall,
                              topo.lineup_is_active, design, env)

@@ -16,12 +16,15 @@ topologies padded to common shapes exactly like `sweep.SweepAxes`:
                    harvest=False, single_sku_gpu=True)   # one compiled call
     res.deployed_kw[i].mean(), res.result(i) ...
 
-On a multi-device host, `sharded_mc_sweep` splits the flattened
-(config × trial) grid over the same 1-D `CONFIG_AXIS` mesh the fleet
-sweep uses (`repro.sharding.axes`); trials are independent, so sharded
-and single-device results agree to float tolerance and one device is a
-passthrough.  `singlehall.monte_carlo` remains the exact
-one-configuration wrapper.
+On a multi-device host, `sharded_mc_sweep` splits the (config × trial)
+grid over the same named 2-D (config × trial) mesh the fleet sweep uses
+(`repro.sharding.axes.sweep_mesh`): flattened and product-sharded by
+default (bitwise the historical 1-D `CONFIG_AXIS` layout on a (D, 1)
+mesh), or block-sharded as a true [B, T] grid with
+`mesh_shape=(dc, dt)` so topologies ship once per configuration;
+trials are independent, so sharded and single-device results agree to
+float tolerance and one device is a passthrough.
+`singlehall.monte_carlo` remains the exact one-configuration wrapper.
 """
 from __future__ import annotations
 
@@ -213,7 +216,8 @@ def _mc_sweep_jit(jt, ta, tb, keys, policy, harvest, with_pods,
     return jax.vmap(per_cfg)(jt, policy, ta, tb, keys)
 
 
-@functools.partial(jax.jit, static_argnames=_MC_STATICS + ("mesh",))
+@functools.partial(jax.jit, static_argnames=_MC_STATICS + ("mesh",),
+                   donate_argnums=tuple(range(5)))
 def _mc_sharded_jit(jt, ta, tb, keys, policy, mesh, harvest, with_pods,
                     split_pods=False, pod_windows=(0, 0),
                     cluster_starts=(0, 0), pod_scan_len=pl.MAX_POD_RACKS,
@@ -221,11 +225,15 @@ def _mc_sharded_jit(jt, ta, tb, keys, policy, mesh, harvest, with_pods,
     """Sharded trial batch: operands arrive FLATTENED to one [B·T]
     (config × trial) axis — `sharded_mc_sweep` repeats the per-config
     topology/policy per trial — which a single `vmap` consumes under
-    `shard_map`, so trials load-balance across devices in B·T/D slabs.
+    `shard_map`, so trials load-balance across devices in B·T/(dc·dt)
+    slabs (`batch_spec` product-shards the flat axis over both mesh
+    axes; a (D, 1) mesh is bitwise the historical 1-D layout).
     (A nested config × trial vmap inside `shard_map` trips an XLA CPU
     compile crash; the flat axis sidesteps it and shards finer anyway.)
-    Trials are independent, so out_specs stay sharded; no collectives."""
-    spec = shax.config_spec()
+    Trials are independent, so out_specs stay sharded; no collectives.
+    Operand buffers are donated — the staged flat batch dies with the
+    dispatch."""
+    spec = shax.batch_spec()
     fn = jax.vmap(lambda jt_c, t_a, t_b, k, pol: _mc_trial(
         jt_c, pol, t_a, t_b, k, harvest=harvest, with_pods=with_pods,
         split_pods=split_pods, pod_windows=pod_windows,
@@ -234,6 +242,55 @@ def _mc_sharded_jit(jt, ta, tb, keys, policy, mesh, harvest, with_pods,
         kernel_interpret=kernel_interpret))
     sharded = shax.shard_map(fn, mesh=mesh, in_specs=(spec,) * 5,
                              out_specs=spec, check_vma=False)
+    return sharded(jt, ta, tb, keys, policy)
+
+
+@functools.partial(jax.jit, static_argnames=_MC_STATICS + ("mesh",),
+                   donate_argnums=tuple(range(5)))
+def _mc_sharded2d_jit(jt, ta, tb, keys, policy, mesh, harvest, with_pods,
+                      split_pods=False, pod_windows=(0, 0),
+                      cluster_starts=(0, 0), pod_scan_len=pl.MAX_POD_RACKS,
+                      hd_scan=None, use_kernel=False,
+                      kernel_interpret=False):
+    """2-D grid sharding: the [B, T] trial grid block-shards over the
+    (config × trial) mesh — configurations over `CONFIG_AXIS`, trial
+    replicas over `TRIAL_AXIS` — while the [B] topology/policy leaves
+    shard over `CONFIG_AXIS` only (replicated across the trial axis).
+    The global per-trial `jnp.repeat` of topologies the flat path stages
+    on the host never happens: each shard repeats its own [b] slab
+    across its [t] local trials *inside* the compiled program, flattens
+    to one [b·t] axis for a single vmap (the nested-vmap XLA CPU crash
+    again), and reshapes back, so out_specs are grid-sharded [B, T]."""
+    cspec = shax.config_spec()
+    gspec = shax.grid_spec()
+    trial = functools.partial(
+        _mc_trial, harvest=harvest, with_pods=with_pods,
+        split_pods=split_pods, pod_windows=pod_windows,
+        cluster_starts=cluster_starts, pod_scan_len=pod_scan_len,
+        hd_scan=hd_scan, use_kernel=use_kernel,
+        kernel_interpret=kernel_interpret)
+    fn = jax.vmap(lambda jt_c, t_a, t_b, k, pol: trial(jt_c, pol, t_a,
+                                                       t_b, k))
+
+    def shard_fn(jt_s, ta_s, tb_s, keys_s, pol_s):
+        b, t = keys_s.shape[:2]
+        # tile [b, …] → [b·t, …] with a GATHER, not broadcast/repeat:
+        # broadcasting a config-sharded, trial-replicated operand inside
+        # the shard SIGFPEs the XLA CPU partitioner (same family as the
+        # nested-vmap crash); the row gather compiles clean everywhere
+        rep = jnp.arange(b * t) // t
+        jt_f = jax.tree.map(lambda x: x[rep], jt_s)
+        pol_f = pol_s[rep]
+        ta_f, tb_f, keys_f = jax.tree.map(
+            lambda x: x.reshape((b * t,) + x.shape[2:]),
+            (ta_s, tb_s, keys_s))
+        out = fn(jt_f, ta_f, tb_f, keys_f, pol_f)
+        return jax.tree.map(
+            lambda x: x.reshape((b, t) + x.shape[1:]), out)
+
+    sharded = shax.shard_map(shard_fn, mesh=mesh,
+                             in_specs=(cspec, gspec, gspec, gspec, cspec),
+                             out_specs=gspec, check_vma=False)
     return sharded(jt, ta, tb, keys, policy)
 
 
@@ -430,19 +487,32 @@ def sharded_mc_sweep(axes: MCAxes, n_trials: int = 32, n_events: int = 600,
                      legacy_pod_cond: bool = False,
                      devices: Sequence[jax.Device] | None = None,
                      models=None, use_kernel: bool | None = None,
-                     kernel_interpret: bool = False) -> MCResult:
-    """`mc_sweep`, with the (config × trial) batch sharded over devices.
+                     kernel_interpret: bool = False,
+                     mesh_shape: Tuple[int, int] | None = None) -> MCResult:
+    """`mc_sweep`, with the (config × trial) grid sharded over devices.
 
-    Same 1-D `CONFIG_AXIS` mesh discipline as `sweep.sharded_sweep`, but
-    the sharded axis is the FLATTENED `B·T` trial grid (each trial is an
-    independent simulation, so sharding trials — not just configurations
-    — load-balances even when `B < D·T`): per-config topologies and
-    policies are repeated per trial, the flat batch splits over
-    `devices` (default: all local devices) via `shard_map`, and outputs
-    reshape back to `[B, T, …]`.  Non-divisible flat grids pad by
-    replicating the first trial and drop the replicas on exit; one
-    device (or a single trial) is a passthrough to `mc_sweep`.
-    Simulated multi-device CPU runs use
+    Two placements on the named 2-D (config × trial) mesh
+    (`repro.sharding.axes.sweep_mesh`):
+
+    * Default (`mesh_shape=None` or a trial extent of 1): the FLATTENED
+      `B·T` trial grid product-shards over both mesh axes — each trial
+      is an independent simulation, so sharding trials, not just
+      configurations, load-balances even when `B < D·T`.  Per-config
+      topologies and policies are repeated per trial on the host, the
+      flat batch splits over `devices` (default: all local devices) via
+      `shard_map`, and outputs reshape back to `[B, T, …]`.  A (D, 1)
+      mesh is bitwise the historical 1-D `CONFIG_AXIS` layout.
+    * `mesh_shape=(dc, dt)` with `dt > 1`: the `[B, T]` grid
+      block-shards — configurations over `CONFIG_AXIS`, trial replicas
+      over `TRIAL_AXIS` — and topologies ship once per configuration
+      ([B] leaves shard over `CONFIG_AXIS` only), never host-repeated
+      per trial; each shard flattens its own (b × t) block inside the
+      compiled program (`_mc_sharded2d_jit`).
+
+    Non-divisible grids pad by replicating the first flat entry (or the
+    first configuration/trial row on the 2-D path) and drop the
+    replicas on exit; one device (or a single trial) is a passthrough
+    to `mc_sweep`.  Simulated multi-device CPU runs use
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
     """
     kw = dict(n_trials=n_trials, n_events=n_events, year=year,
@@ -461,28 +531,59 @@ def sharded_mc_sweep(axes: MCAxes, n_trials: int = 32, n_events: int = 600,
         axes, n_trials, n_events, year, scenario, gpu_power_share,
         pod_racks, quantum_racks, la_fraction, single_sku_gpu,
         refill_events, legacy_pod_cond)
-    # flatten (config, trial) → one batch axis; repeat per-config leaves
-    jt = jax.tree.map(lambda x: jnp.repeat(x, T, axis=0), jt)
-    policy = jnp.repeat(policy, T)
-    flat = jax.tree.map(lambda x: x.reshape((B * T,) + x.shape[2:]),
-                        (ta, tb, keys))
-    args = (jt,) + flat + (policy,)
+    mesh = shax.sweep_mesh(devs, mesh_shape)
+    dc, dt = mesh.devices.shape
 
-    D = len(devs)
-    N_pad = -(-B * T // D) * D
-    if N_pad != B * T:
-        def pad(x):
-            fill = jnp.broadcast_to(x[:1], (N_pad - B * T,) + x.shape[1:])
-            return jnp.concatenate([x, fill])
-        args = jax.tree.map(pad, args)
+    if dt > 1:
+        # ---- 2-D grid path: pad B → ·dc and T → ·dt, ship [B] leaves
+        # config-sharded and [B, T] leaves grid-sharded ----
+        B_pad, T_pad = -(-B // dc) * dc, -(-T // dt) * dt
 
-    mesh = shax.config_mesh(devs)
-    args = jax.device_put(args, NamedSharding(mesh, shax.config_spec()))
-    out = _mc_sharded_jit(*args, harvest=harvest, mesh=mesh,
-                          use_kernel=pl.resolve_use_kernel(use_kernel),
-                          kernel_interpret=kernel_interpret, **statics)
-    out = jax.tree.map(
-        lambda x: x[:B * T].reshape((B, T) + x.shape[1:]), out)
+        def pad_axis(x, n, axis):
+            if x.shape[axis] == n:
+                return x
+            take = jnp.take(x, jnp.zeros((n - x.shape[axis],), jnp.int32),
+                            axis=axis)
+            return jnp.concatenate([x, take], axis=axis)
+
+        cfg_leaves = jax.tree.map(lambda x: pad_axis(x, B_pad, 0),
+                                  (jt, policy))
+        grid_leaves = jax.tree.map(
+            lambda x: pad_axis(pad_axis(x, B_pad, 0), T_pad, 1),
+            (ta, tb, keys))
+        cfg_leaves = jax.device_put(
+            cfg_leaves, NamedSharding(mesh, shax.config_spec()))
+        ta, tb, keys = jax.device_put(
+            grid_leaves, NamedSharding(mesh, shax.grid_spec()))
+        out = _mc_sharded2d_jit(cfg_leaves[0], ta, tb, keys, cfg_leaves[1],
+                                harvest=harvest, mesh=mesh,
+                                use_kernel=pl.resolve_use_kernel(use_kernel),
+                                kernel_interpret=kernel_interpret, **statics)
+        out = jax.tree.map(lambda x: x[:B, :T], out)
+    else:
+        # ---- flat path: repeat per-config leaves per trial and shard
+        # the [B·T] axis over the whole mesh ----
+        jt = jax.tree.map(lambda x: jnp.repeat(x, T, axis=0), jt)
+        policy = jnp.repeat(policy, T)
+        flat = jax.tree.map(lambda x: x.reshape((B * T,) + x.shape[2:]),
+                            (ta, tb, keys))
+        args = (jt,) + flat + (policy,)
+
+        D = len(devs)
+        N_pad = -(-B * T // D) * D
+        if N_pad != B * T:
+            def pad(x):
+                fill = jnp.broadcast_to(x[:1],
+                                        (N_pad - B * T,) + x.shape[1:])
+                return jnp.concatenate([x, fill])
+            args = jax.tree.map(pad, args)
+
+        args = jax.device_put(args, NamedSharding(mesh, shax.batch_spec()))
+        out = _mc_sharded_jit(*args, harvest=harvest, mesh=mesh,
+                              use_kernel=pl.resolve_use_kernel(use_kernel),
+                              kernel_interpret=kernel_interpret, **statics)
+        out = jax.tree.map(
+            lambda x: x[:B * T].reshape((B, T) + x.shape[1:]), out)
     return _mc_finalize(out, axes, models=models, year=year,
                         scenario=scenario,
                         gpu_share=1.0 if single_sku_gpu else gpu_power_share,

@@ -1,0 +1,181 @@
+"""Streaming quantile estimators for scan-carried statistics.
+
+The lifecycle scan's p50/p90 mature-hall stranding used to be a
+post-hoc reduction over the scanned ``[M, H]`` stranding history — fine
+for one configuration, a memory ceiling for 10⁵–10⁶-config grids.  This
+module provides the O(1)-memory alternatives `fleet.simulate_lifecycle`
+compiles when ``exact_quantiles=False``:
+
+* `hist_masked_quantiles` — fixed-bin histogram quantiles over a masked
+  cross-section.  Stranding fractions live in a known range (``[0, 1]``),
+  so a static ``n_bins``-bucket histogram plus rank interpolation
+  estimates any quantile with absolute error ≤ one bin width
+  ``(hi - lo) / n_bins`` (each interpolated order statistic is located
+  within its true bucket; see `_rank_value`).  This is what the scan
+  body calls per month: it consumes the ``[H]`` cross-section in place
+  and emits two scalars, so no ``[M, H]`` history is ever materialized.
+
+* `p2_stream_quantiles` — the classic Jain & Chlamtac P² estimator,
+  vectorized over quantiles and scanned over a masked stream.  Five
+  markers per quantile track (min, p/2-ish, p-ish, (1+p)/2-ish, max)
+  order statistics with parabolic updates; streams shorter than five
+  valid observations fall back to the exact small-sample quantile.  P²
+  carries no hard error bound (it is exact-bucket-free), so it is the
+  right tool for *unbounded-range* streams; the property-test harness
+  (`tests/test_streaming_quantiles.py`) drives it against
+  ``np.percentile`` with a tolerance that shrinks as the stream grows.
+
+Both estimators use ``np.percentile``'s 'linear' rank convention
+(``pos = q/100 · (n-1)``) so the exact and streaming paths agree as
+``n_bins → ∞`` / ``n → ∞``.  All-masked-out inputs yield NaN — the same
+sentinel `fleet._masked_percentiles` emits for an all-False mask.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Default histogram resolution for the streaming scan path: 512 buckets
+# over [0, 1] bounds the stranding-quantile error at ~0.2% absolute,
+# well inside the tolerance of every consumer (the goldens assert 2e-3).
+DEFAULT_BINS = 512
+
+
+def _rank_value(counts, cdf, j, n_bins, lo, width):
+    """Histogram estimate of the value at integer 0-indexed rank ``j``.
+
+    Bucket ``k`` holds ranks ``[cdf[k-1], cdf[k])``, so the true order
+    statistic lies in ``[lo + k·width, lo + (k+1)·width)``; spreading the
+    bucket's mass uniformly places rank ``j`` at fraction
+    ``(j - cdf[k-1] + 0.5) / counts[k]`` through the bucket.  The
+    estimate therefore never leaves the true bucket → error ≤ ``width``.
+    """
+    k = jnp.clip(jnp.searchsorted(cdf, j, side="right"), 0, n_bins - 1)
+    below = jnp.where(k > 0, cdf[jnp.maximum(k - 1, 0)], 0.0)
+    frac = jnp.clip((j - below + 0.5) / jnp.maximum(counts[k], 1.0),
+                    0.0, 1.0)
+    return lo + width * (k.astype(jnp.float32) + frac)
+
+
+def hist_masked_quantiles(x, mask, qs, n_bins: int = DEFAULT_BINS,
+                          lo: float = 0.0, hi: float = 1.0):
+    """Histogram quantiles of ``x[mask]`` for each static q in ``qs``.
+
+    Values are clipped into ``[lo, hi]`` before binning (the documented
+    error bound holds only for in-range data; stranding fractions are).
+    The continuous rank ``q/100 · (n-1)`` is linearly interpolated
+    between its two neighboring integer-rank estimates, each located
+    within its true bucket, so the absolute error is at most one bin
+    width ``(hi - lo) / n_bins``.  Returns a tuple of scalars, NaN when
+    the mask selects nothing — the same interface and sentinel as
+    `fleet._masked_percentiles`.
+    """
+    width = (hi - lo) / n_bins
+    w = jnp.clip((x - lo) / (hi - lo), 0.0, 1.0)
+    b = jnp.minimum((w * n_bins).astype(jnp.int32), n_bins - 1)
+    counts = jnp.zeros((n_bins,), jnp.float32).at[b].add(
+        mask.astype(jnp.float32))
+    cdf = jnp.cumsum(counts)
+    n = cdf[-1]
+    top = jnp.maximum(n - 1.0, 0.0)
+    out = []
+    for q in qs:
+        pos = q / 100.0 * top
+        j_lo = jnp.floor(pos)
+        frac = pos - j_lo
+        v_lo = _rank_value(counts, cdf, j_lo, n_bins, lo, width)
+        v_hi = _rank_value(counts, cdf, jnp.ceil(pos), n_bins, lo, width)
+        val = v_lo * (1.0 - frac) + v_hi * frac
+        out.append(jnp.where(n > 0, val, jnp.nan))
+    return tuple(out)
+
+
+def _small_sample_quantiles(buf, n, qs):
+    """Exact 'linear' quantiles of the first ``n`` (< 5) entries of the
+    sorted, +inf-padded 5-slot P² bootstrap buffer."""
+    top = jnp.maximum(n.astype(jnp.float32) - 1.0, 0.0)
+    out = []
+    for q in qs:
+        pos = q / 100.0 * top
+        k_lo = jnp.floor(pos).astype(jnp.int32)
+        k_hi = jnp.ceil(pos).astype(jnp.int32)
+        frac = pos - k_lo.astype(jnp.float32)
+        out.append(buf[k_lo] * (1.0 - frac) + buf[k_hi] * frac)
+    return jnp.stack(out)
+
+
+def p2_stream_quantiles(xs, mask, qs):
+    """P² streaming quantiles of the masked stream ``xs[mask]``.
+
+    ``xs``/``mask`` are ``[N]``; ``qs`` is a static tuple of percentiles
+    (e.g. ``(50.0, 90.0)``).  Returns a ``[len(qs)]`` array.  Each
+    quantile keeps the classic five markers (heights ``q``, integer
+    positions ``pos``, desired positions ``1 + (n-1)·d``) updated with
+    the parabolic P² rule and its linear fallback; the first five valid
+    observations bootstrap the markers from the exact sorted sample, and
+    streams that never reach five fall back to the exact small-sample
+    quantile (NaN when the mask selects nothing).
+
+    The whole estimator is one ``lax.scan`` with an O(len(qs)) carry —
+    the memory shape a scan-carried statistic must have.
+    """
+    Q = len(qs)
+    qarr = jnp.asarray([q / 100.0 for q in qs], jnp.float32)   # [Q]
+    # desired-position increments d = [0, p/2, p, (1+p)/2, 1]     [Q, 5]
+    d = jnp.stack([jnp.zeros_like(qarr), qarr / 2.0, qarr,
+                   (1.0 + qarr) / 2.0, jnp.ones_like(qarr)], axis=1)
+
+    def p2_update(h, pos, n, x):
+        """One P² step for all Q marker sets at once ([Q, 5] arrays)."""
+        # cell index k ∈ [1, 4]: number of markers ≤ x, with the end
+        # markers stretched to min/max first
+        h = h.at[:, 0].min(x).at[:, 4].max(x)
+        k = jnp.clip(jnp.sum(x >= h, axis=1), 1, 4)             # [Q]
+        pos = pos + (jnp.arange(5)[None, :] >= k[:, None])
+        n_des = 1.0 + (n - 1.0) * d                             # [Q, 5]
+        # middle markers adjust sequentially (marker i sees i-1's move)
+        for i in (1, 2, 3):
+            hm, hi, hp = h[:, i - 1], h[:, i], h[:, i + 1]
+            pm, pi, pp = pos[:, i - 1], pos[:, i], pos[:, i + 1]
+            delta = n_des[:, i] - pi
+            s = jnp.where((delta >= 1.0) & (pp - pi > 1.0), 1.0,
+                          jnp.where((delta <= -1.0) & (pm - pi < -1.0),
+                                    -1.0, 0.0))
+            # parabolic estimate; linear fallback keeps monotonicity
+            para = hi + s / (pp - pm) * (
+                (pi - pm + s) * (hp - hi) / (pp - pi)
+                + (pp - pi - s) * (hi - hm) / (pi - pm))
+            lin = hi + s * jnp.where(s > 0, (hp - hi) / (pp - pi),
+                                     (hi - hm) / (pi - pm))
+            new = jnp.where((para <= hm) | (para >= hp), lin, para)
+            h = h.at[:, i].set(jnp.where(s != 0.0, new, hi))
+            pos = pos.at[:, i].set(pi + s)
+        return h, pos
+
+    pos0 = jnp.broadcast_to(jnp.arange(1.0, 6.0), (Q, 5))
+
+    def step(carry, inp):
+        h, pos, n = carry
+        x, ok = inp
+        # bootstrap phase (n < 5): insert x into the sorted +inf-padded
+        # 5-slot buffer shared by every marker row; the step that fills
+        # slot 5 leaves exactly the sorted initial markers with
+        # positions [1..5].  The P² branch is computed unconditionally
+        # (its inf-poisoned bootstrap result is discarded by the where).
+        boot = jnp.sort(
+            h.at[:, jnp.minimum(n, 4.0).astype(jnp.int32)].set(x), axis=1)
+        h_u, pos_u = p2_update(h, pos, n + 1.0, x)
+        use_boot = n < 5.0
+        h_n = jnp.where(ok, jnp.where(use_boot, boot, h_u), h)
+        pos_n = jnp.where(ok, jnp.where(use_boot, pos0, pos_u), pos)
+        n_n = jnp.where(ok, n + 1.0, n)
+        return (h_n, pos_n, n_n), None
+
+    h0 = jnp.full((Q, 5), jnp.inf, jnp.float32)
+    (h, pos, n), _ = jax.lax.scan(
+        step, (h0, pos0, jnp.zeros((), jnp.float32)),
+        (jnp.asarray(xs, jnp.float32), jnp.asarray(mask, bool)))
+
+    small = _small_sample_quantiles(h[0], n, qs)   # rows identical for n<5
+    est = jnp.where(n >= 5.0, h[:, 2], small)
+    return jnp.where(n > 0.0, est, jnp.nan)

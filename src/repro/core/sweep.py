@@ -15,11 +15,17 @@ are padded to a common event count, and `fleet.simulate_lifecycle` is
     res = sweep(axes)                      # one compiled call, 8 configs
     res.p90_stranding[i, -1], res.effective_dpm[i], res.result(i) ...
 
-On a multi-device host, `sharded_sweep` splits the same batch over a 1-D
-device mesh (`repro.sharding.axes.CONFIG_AXIS`) with `shard_map`, so each
-device simulates only its own slab of configurations:
+On a multi-device host, `sharded_sweep` splits the same batch over the
+named 2-D (config × trial) mesh (`repro.sharding.axes.sweep_mesh`) with
+`shard_map`, so each device simulates only its own slab of
+configurations; `chunk_size` streams giant grids through one compiled
+executable with donated input buffers, and `exact_quantiles=False`
+swaps the per-config `[M, H]` stranding history for the O(1)-memory
+streaming histogram quantiles (`repro.core.quantiles`):
 
     res = sharded_sweep(axes)              # == sweep(axes), D-way parallel
+    res = sharded_sweep(axes, mesh_shape=(2, 2), chunk_size=256,
+                        exact_quantiles=False)   # planet-scale settings
 
 The configuration axis is embarrassingly parallel (no cross-config
 collectives), so sharded and single-device results agree to float
@@ -31,6 +37,7 @@ from __future__ import annotations
 
 import functools
 import itertools
+import warnings
 from dataclasses import dataclass, field
 from types import SimpleNamespace
 from typing import List, Sequence
@@ -195,17 +202,21 @@ class SweepResult:
                    static_argnames=("harvest", "mature_months", "with_pods",
                                     "legacy_pod_cond", "pod_scan_len",
                                     "hd_scan", "use_kernel",
-                                    "kernel_interpret"))
+                                    "kernel_interpret", "exact_quantiles",
+                                    "quantile_bins"))
 def _sweep_jit(jt, ft, idx, valid, idx_pod, valid_pod, policy, seed, h_cap,
                n_real, harvest, mature_months, with_pods,
                legacy_pod_cond=False, pod_scan_len=MAX_POD_RACKS,
-               hd_scan=None, use_kernel=False, kernel_interpret=False):
+               hd_scan=None, use_kernel=False, kernel_interpret=False,
+               exact_quantiles=True, quantile_bins=None):
     fn = functools.partial(simulate_lifecycle, harvest=harvest,
                            mature_months=mature_months, with_pods=with_pods,
                            legacy_pod_cond=legacy_pod_cond,
                            pod_scan_len=pod_scan_len, hd_scan=hd_scan,
                            use_kernel=use_kernel,
-                           kernel_interpret=kernel_interpret)
+                           kernel_interpret=kernel_interpret,
+                           exact_quantiles=exact_quantiles,
+                           quantile_bins=quantile_bins)
     return jax.vmap(fn)(jt, ft, idx, valid, idx_pod, valid_pod, policy,
                         seed, h_cap, n_real)
 
@@ -213,20 +224,29 @@ def _sweep_jit(jt, ft, idx, valid, idx_pod, valid_pod, policy, seed, h_cap,
 @functools.partial(jax.jit,
                    static_argnames=("harvest", "mature_months", "with_pods",
                                     "pod_scan_len", "hd_scan", "use_kernel",
-                                    "kernel_interpret", "mesh"))
+                                    "kernel_interpret", "exact_quantiles",
+                                    "quantile_bins", "mesh"),
+                   donate_argnums=tuple(range(10)))
 def _sharded_sweep_jit(jt, ft, idx, valid, idx_pod, valid_pod, policy, seed,
                        h_cap, n_real, harvest, mature_months, with_pods,
                        pod_scan_len, hd_scan, use_kernel, kernel_interpret,
-                       mesh):
-    """`_sweep_jit` with the configuration axis split over `mesh`: each
-    device vmaps only its own B/D slab.  No collectives — configurations
-    are independent — so out_specs keep everything config-sharded."""
+                       exact_quantiles, quantile_bins, mesh):
+    """`_sweep_jit` with the flat configuration batch split over `mesh`
+    (2-D config × trial; the batch product-shards over both axes via
+    `batch_spec`, so a (D, 1) mesh reproduces the historical 1-D
+    layout): each device vmaps only its own B/(dc·dt) slab.  No
+    collectives — configurations are independent — so out_specs keep
+    everything batch-sharded.  All ten operand buffers are donated: a
+    chunk's inputs die the moment its dispatch is queued, which is what
+    keeps per-device memory flat while `sharded_sweep` streams chunks."""
     fn = functools.partial(simulate_lifecycle, harvest=harvest,
                            mature_months=mature_months, with_pods=with_pods,
                            pod_scan_len=pod_scan_len, hd_scan=hd_scan,
                            use_kernel=use_kernel,
-                           kernel_interpret=kernel_interpret)
-    spec = shax.config_spec()
+                           kernel_interpret=kernel_interpret,
+                           exact_quantiles=exact_quantiles,
+                           quantile_bins=quantile_bins)
+    spec = shax.batch_spec()
     sharded = shax.shard_map(jax.vmap(fn), mesh=mesh,
                              in_specs=(spec,) * 10, out_specs=spec,
                              check_vma=False)
@@ -426,7 +446,9 @@ def sweep(axes: SweepAxes, harvest: bool = True, mature_months: int = 12,
           legacy_pod_cond: bool = False, models=None,
           metric_year: int | None = None,
           use_kernel: bool | None = None,
-          kernel_interpret: bool = False) -> SweepResult:
+          kernel_interpret: bool = False,
+          exact_quantiles: bool = True,
+          quantile_bins: int | None = None) -> SweepResult:
     """Evaluate every configuration in `axes` in one compiled call.
 
     All envelopes must share the same buildout horizon (the scan length).
@@ -470,6 +492,14 @@ def sweep(axes: SweepAxes, harvest: bool = True, mature_months: int = 12,
             default (`placement.default_use_kernel`: TPU on, CPU off).
         kernel_interpret: run the kernel in Pallas interpret mode (CPU
             CI fallback; only meaningful with the kernel path on).
+        exact_quantiles: `True` (default) keeps the exact post-hoc
+            p50/p90 reduction over each configuration's `[M, H]`
+            stranding history; `False` compiles the O(1)-memory
+            streaming histogram path (error ≤ `1 / quantile_bins`; see
+            `fleet.simulate_lifecycle`) — the right choice for giant
+            grids where the per-config history dominates memory.
+        quantile_bins: streaming-histogram resolution (default
+            `quantiles.DEFAULT_BINS` = 512); ignored when exact.
     """
     args, months, topos, X_pad, with_pods, pod_len, hd_scan = _prepare(
         axes, n_halls_max, traces, legacy_pod_cond)
@@ -477,7 +507,9 @@ def sweep(axes: SweepAxes, harvest: bool = True, mature_months: int = 12,
                      with_pods=with_pods, legacy_pod_cond=legacy_pod_cond,
                      pod_scan_len=pod_len, hd_scan=hd_scan,
                      use_kernel=pl.resolve_use_kernel(use_kernel),
-                     kernel_interpret=kernel_interpret)
+                     kernel_interpret=kernel_interpret,
+                     exact_quantiles=exact_quantiles,
+                     quantile_bins=quantile_bins)
     return _finalize(out, axes, months, topos, X_pad, mature_months,
                      models=models, metric_year=metric_year)
 
@@ -488,15 +520,23 @@ def sharded_sweep(axes: SweepAxes, harvest: bool = True,
                   devices: Sequence[jax.Device] | None = None,
                   models=None, metric_year: int | None = None,
                   use_kernel: bool | None = None,
-                  kernel_interpret: bool = False) -> SweepResult:
-    """`sweep`, with the configuration axis sharded over a device mesh.
+                  kernel_interpret: bool = False,
+                  exact_quantiles: bool = True,
+                  quantile_bins: int | None = None,
+                  mesh_shape: tuple[int, int] | None = None,
+                  chunk_size: int | None = None) -> SweepResult:
+    """`sweep`, with the configuration batch sharded over a device mesh.
 
-    The batch is split along `repro.sharding.axes.CONFIG_AXIS` of a 1-D
-    mesh over `devices` (default: all local devices) via `shard_map`:
-    each device receives only its own slab of padded topologies and
-    traces (`jax.device_put` with a config-sharded `NamedSharding`, so
-    slabs land on their device up front rather than being replicated)
-    and vmaps `simulate_lifecycle` over the B/D configurations it owns.
+    The batch is split over the named 2-D (config × trial) mesh of
+    `repro.sharding.axes.sweep_mesh` via `shard_map`: the flat
+    configuration axis product-shards over BOTH mesh axes
+    (`batch_spec`), so each device receives only its own slab of padded
+    topologies and traces (`jax.device_put` with a batch-sharded
+    `NamedSharding`, so slabs land on their device up front rather than
+    being replicated) and vmaps `simulate_lifecycle` over the B/(dc·dt)
+    configurations it owns.  The default `mesh_shape` is `(D, 1)` —
+    bitwise the historical 1-D `CONFIG_AXIS` layout — and any `(dc, dt)`
+    with `dc·dt = D` places the same slabs on the same device order.
     Configurations are independent, so results match single-device
     `sweep` to float tolerance.
 
@@ -505,39 +545,73 @@ def sharded_sweep(axes: SweepAxes, harvest: bool = True,
     replicas are dropped before `SweepResult` assembly, so remainder
     grids return exactly `B` configurations.
 
+    `chunk_size` streams the batch through the compiled executable in
+    fixed-size chunks instead of one dispatch: every chunk shares one
+    executable (identical static shapes), dispatches asynchronously
+    (JAX queues the next chunk while the previous computes), and donates
+    its input buffers (`donate_argnums` on `_sharded_sweep_jit`), so
+    per-device live memory is bounded by one chunk — flat in grid size.
+    This is how `giant_grid` sweeps ≥10⁴ configurations.
+
     With one device (or a length-1 batch) this is a passthrough to
-    `sweep`.  To exercise the sharded path on a single-CPU host, set
+    `sweep` — unless `chunk_size` is set, which engages the chunked
+    streaming dispatch on a trivial 1×1 mesh (bounded live memory is
+    useful without parallelism).  To exercise the sharded path on a
+    single-CPU host, set
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before the
     first jax import.
 
     Args: as `sweep`, plus
         devices: devices to shard over (default `jax.devices()`).
+        mesh_shape: (config, trial) mesh extents; must multiply out to
+            the device count (default `(D, 1)`).
+        chunk_size: configurations per dispatch (rounded up to a
+            multiple of the device count; default: the whole batch).
     """
     devs = list(devices) if devices is not None else list(jax.devices())
-    if len(devs) <= 1 or len(axes) == 1:
+    # chunked dispatch is meaningful even on one device (live memory
+    # bounded by one chunk), so only passthrough when it isn't requested
+    if (len(devs) <= 1 and chunk_size is None) or len(axes) == 1:
         return sweep(axes, harvest=harvest, mature_months=mature_months,
                      n_halls_max=n_halls_max, traces=traces, models=models,
                      metric_year=metric_year, use_kernel=use_kernel,
-                     kernel_interpret=kernel_interpret)
+                     kernel_interpret=kernel_interpret,
+                     exact_quantiles=exact_quantiles,
+                     quantile_bins=quantile_bins)
 
     args, months, topos, X_pad, with_pods, pod_len, hd_scan = _prepare(
         axes, n_halls_max, traces)
     B, D = len(axes), len(devs)
-    B_pad = -(-B // D) * D
+    C = -(-B // D) * D if chunk_size is None \
+        else max(-(-int(chunk_size) // D) * D, D)
+    B_pad = -(-B // C) * C
     if B_pad != B:
         def pad(x):
             fill = jnp.broadcast_to(x[:1], (B_pad - B,) + x.shape[1:])
             return jnp.concatenate([x, fill])
         args = jax.tree.map(pad, args)
 
-    mesh = shax.config_mesh(devs)
-    args = jax.device_put(args, NamedSharding(mesh, shax.config_spec()))
-    out = _sharded_sweep_jit(*args, harvest=harvest,
-                             mature_months=mature_months,
-                             with_pods=with_pods, pod_scan_len=pod_len,
-                             hd_scan=hd_scan,
-                             use_kernel=pl.resolve_use_kernel(use_kernel),
-                             kernel_interpret=kernel_interpret, mesh=mesh)
+    mesh = shax.sweep_mesh(devs, mesh_shape)
+    sharding = NamedSharding(mesh, shax.batch_spec())
+    kw = dict(harvest=harvest, mature_months=mature_months,
+              with_pods=with_pods, pod_scan_len=pod_len, hd_scan=hd_scan,
+              use_kernel=pl.resolve_use_kernel(use_kernel),
+              kernel_interpret=kernel_interpret,
+              exact_quantiles=exact_quantiles,
+              quantile_bins=quantile_bins, mesh=mesh)
+    outs = []
+    with warnings.catch_warnings():
+        # int topology/trace buffers can never alias the f32 output
+        # curves; XLA's per-buffer "donated but not usable" note is
+        # expected here, and the usable donations still land
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        for s in range(0, B_pad, C):
+            chunk = jax.device_put(
+                jax.tree.map(lambda x: x[s:s + C], args), sharding)
+            outs.append(_sharded_sweep_jit(*chunk, **kw))
+    out = outs[0] if len(outs) == 1 else \
+        jax.tree.map(lambda *xs: jnp.concatenate(xs), *outs)
     if B_pad != B:
         out = jax.tree.map(lambda x: x[:B], out)
     return _finalize(out, axes, months, topos, X_pad, mature_months,

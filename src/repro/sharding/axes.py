@@ -6,11 +6,14 @@ launch configuration (single-pod, multi-pod, long-context), which is how
 the §Perf hillclimb iterates sharding without touching model code.
 
 Besides the model meshes ("pod", "data", "model"), this module owns the
-fleet-sweep mesh: `repro.core.sweep.sharded_sweep` shards its
-embarrassingly-parallel configuration batch over a 1-D mesh whose single
-axis is `CONFIG_AXIS` (see `config_mesh` / `config_spec`), and the
-version-portable `shard_map` wrapper exported here is the one entry point
-the rest of the codebase uses.
+sweep meshes: `repro.core.sweep.sharded_sweep` and
+`repro.core.mc_sweep.sharded_mc_sweep` shard their embarrassingly-parallel
+grids over a named 2-D (`CONFIG_AXIS` × `TRIAL_AXIS`) mesh (`sweep_mesh`)
+whose PartitionSpecs come from the `SWEEP_RULES` logical-axis table via
+`spec_for` (`batch_spec` for flat batches, `grid_spec` for [B, T] trial
+grids; the default (D, 1) shape reproduces the historical 1-D
+`config_mesh` layout bitwise).  The version-portable `shard_map` wrapper
+exported here is the one entry point the rest of the codebase uses.
 """
 from __future__ import annotations
 
@@ -47,11 +50,28 @@ Rules = Dict[str, AxisVal]
 # Fleet-sweep configuration mesh (repro.core.sweep.sharded_sweep).
 # ---------------------------------------------------------------------------
 
-# Mesh-axis name for the sweep's configuration batch.  The batch is
-# embarrassingly parallel (one lifecycle per configuration, no cross-config
-# collectives), so the mesh is always 1-D over however many devices the
-# caller hands in.
+# Mesh-axis names for the sweep's (configuration × trial) grid.  The grid
+# is embarrassingly parallel (one lifecycle per configuration/trial, no
+# cross-config collectives), so mesh geometry is purely a placement
+# choice: a 1-D `CONFIG_AXIS` mesh for flat configuration batches, or a
+# 2-D (config × trial) mesh that spreads Monte-Carlo trial replicas over
+# their own axis (multi-host fleets put `TRIAL_AXIS` on the fast
+# intra-host interconnect; here it keeps per-device memory flat in both
+# grid dimensions).
 CONFIG_AXIS = "config"
+TRIAL_AXIS = "trial"
+
+# Logical-axis rules for the sweep engines (the levanter named-axis
+# idiom: engine code names *logical* axes, this table maps them onto
+# mesh axes, `spec_for` builds the PartitionSpecs).  "batch" is a flat
+# (config·trial) axis product-sharded over BOTH mesh axes — on a (D, 1)
+# mesh that is exactly the old 1-D `P(CONFIG_AXIS)` layout, so the 2-D
+# generalization is bitwise-inert for flat batches.
+SWEEP_RULES: Rules = {
+    "config": CONFIG_AXIS,
+    "trial": TRIAL_AXIS,
+    "batch": (CONFIG_AXIS, TRIAL_AXIS),
+}
 
 
 def config_mesh(devices: Optional[Sequence[jax.Device]] = None) -> Mesh:
@@ -64,7 +84,40 @@ def config_mesh(devices: Optional[Sequence[jax.Device]] = None) -> Mesh:
 def config_spec() -> P:
     """PartitionSpec sharding the leading (configuration) axis over
     `CONFIG_AXIS`; trailing dims replicated."""
-    return P(CONFIG_AXIS)
+    return spec_for(("config",), SWEEP_RULES)
+
+
+def sweep_mesh(devices: Optional[Sequence[jax.Device]] = None,
+               shape: Optional[Tuple[int, int]] = None) -> Mesh:
+    """2-D (`CONFIG_AXIS` × `TRIAL_AXIS`) device mesh over `devices`.
+
+    `shape=(dc, dt)` must multiply out to the device count; the default
+    `(D, 1)` puts every device on the configuration axis, which makes
+    flat-batch sharding under `batch_spec()` bitwise-identical to the
+    historical 1-D `config_mesh` layout (same device order, same slabs).
+    """
+    devs = list(devices) if devices is not None else list(jax.devices())
+    D = len(devs)
+    if shape is None:
+        shape = (D, 1)
+    dc, dt = int(shape[0]), int(shape[1])
+    if dc < 1 or dt < 1 or dc * dt != D:
+        raise ValueError(
+            f"mesh shape {shape} needs {max(dc, 1) * max(dt, 1)} devices, "
+            f"got {D}")
+    return jax.make_mesh((dc, dt), (CONFIG_AXIS, TRIAL_AXIS), devices=devs)
+
+
+def batch_spec() -> P:
+    """PartitionSpec for a FLAT (config·trial) batch axis: product-sharded
+    over both mesh axes (dc·dt-way)."""
+    return spec_for(("batch",), SWEEP_RULES)
+
+
+def grid_spec() -> P:
+    """PartitionSpec for a [B, T] (config, trial) grid: configurations
+    block-shard over `CONFIG_AXIS`, trials over `TRIAL_AXIS`."""
+    return spec_for(("config", "trial"), SWEEP_RULES)
 
 # Baseline rule set for the production mesh ("pod", "data", "model").
 # DP over (pod×data); TP/EP/vocab over model; optimizer state additionally

@@ -70,3 +70,20 @@ def test_scale_stability():
         r = run_fleet(FleetConfig(h.get_design("3+1"), env, seed=7))
         p90.append(r.p90_stranding[-1])
     assert abs(p90[0] - p90[1]) < 0.12
+
+
+def test_masked_percentiles_all_false_mask_is_nan():
+    """Regression (ISSUE 8): an all-False mask used to leak the +inf
+    sort padding into the quantile; it must yield the NaN sentinel —
+    matching the streaming estimators — while any non-empty mask stays
+    exact np.percentile('linear')."""
+    from repro.core.fleet import _masked_percentiles
+    import jax.numpy as jnp
+
+    x = jnp.asarray(np.linspace(0.0, 1.0, 7), jnp.float32)
+    empty = _masked_percentiles(x, jnp.zeros(7, bool), (50.0, 90.0))
+    assert all(np.isnan(np.asarray(v)) for v in empty)
+    mask = np.array([1, 0, 1, 1, 0, 1, 1], bool)
+    got = _masked_percentiles(x, jnp.asarray(mask), (50.0, 90.0))
+    ref = np.percentile(np.asarray(x)[mask].astype(np.float64), (50, 90))
+    np.testing.assert_allclose(np.asarray(got), ref, rtol=1e-6)

@@ -1,0 +1,240 @@
+"""Named 2-D (config × trial) mesh equivalence tests (ISSUE 8).
+
+The planet-scale sharding obligation: on a 4-device (simulated) host the
+2×2 named mesh must reproduce the 1-D 4×1 layout, which must reproduce
+the unsharded engines —
+
+* `sharded_sweep`: the flat configuration axis product-shards over BOTH
+  mesh axes (`batch_spec`), so (4, 1), (2, 2) and (1, 4) meshes all see
+  the same per-device slabs in the same order; chunked streaming
+  dispatch (`chunk_size`) must concatenate back to the one-shot result;
+  non-divisible batches pad-and-drop.
+* `sharded_mc_sweep`: `mesh_shape=(dc, dt)` with `dt > 1` block-shards
+  the [B, T] grid (configs over CONFIG_AXIS, trials over TRIAL_AXIS)
+  and must match the flat product-sharded layout and unsharded
+  `mc_sweep`, including non-divisible B and T remainders.
+
+This module forces 4 host devices when it is the first jax importer
+(the test_sharded_sweep.py pattern); under the full 2-device tier-1 run
+the 4-device cases skip and CI exercises them in a dedicated
+``--xla_force_host_platform_device_count=4`` leg.
+"""
+import os
+import sys
+
+if "jax" not in sys.modules:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=4").strip()
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.core import hierarchy as h, placement as pl  # noqa: E402
+from repro.core import projections as proj  # noqa: E402
+from repro.core import quantiles as qt  # noqa: E402
+from repro.core.arrivals import EnvelopeSpec  # noqa: E402
+from repro.core.mc_sweep import MCAxes, mc_sweep, sharded_mc_sweep  # noqa: E402
+from repro.core.sweep import SweepAxes, sharded_sweep, sweep  # noqa: E402
+from repro.sharding import axes as shax  # noqa: E402
+
+needs4 = pytest.mark.skipif(jax.device_count() < 4,
+                            reason="needs >=4 host devices")
+
+SCALE = 0.01
+
+
+def _env(scenario):
+    return EnvelopeSpec(demand_scale=SCALE, gpu_scenario=scenario)
+
+
+def _grid8():
+    return SweepAxes.product(
+        designs=[h.get_design("4N/3"), h.get_design("3+1")],
+        envs=[_env(proj.MED), _env(proj.HIGH)],
+        seeds=(3, 4))
+
+
+def _assert_sweeps_equal(a, b):
+    """Same inputs, same per-config program, different device layout —
+    tolerances are tight."""
+    assert len(a) == len(b)
+    np.testing.assert_array_equal(a.n_halls_built, b.n_halls_built)
+    np.testing.assert_allclose(a.final_deployed_mw, b.final_deployed_mw,
+                               rtol=1e-6)
+    np.testing.assert_allclose(a.deployed_mw, b.deployed_mw,
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(a.p50_stranding, b.p50_stranding, atol=1e-6)
+    np.testing.assert_allclose(a.p90_stranding, b.p90_stranding, atol=1e-6)
+    np.testing.assert_array_equal(a.halls_active, b.halls_active)
+    np.testing.assert_allclose(a.final_hall_stranding,
+                               b.final_hall_stranding, atol=1e-6)
+    np.testing.assert_allclose(a.placed_fraction, b.placed_fraction,
+                               atol=1e-7)
+
+
+def _assert_mc_equal(a, b):
+    assert len(a) == len(b) and a.n_trials == b.n_trials
+    for key in ("saturated", "placed_a", "placed_b"):
+        np.testing.assert_array_equal(getattr(a, key), getattr(b, key),
+                                      err_msg=key)
+    for key in ("lineup_stranding", "hall_stranding", "deployed_kw"):
+        np.testing.assert_allclose(getattr(a, key), getattr(b, key),
+                                   rtol=1e-6, atol=1e-5, err_msg=key)
+
+
+# ---------------------------------------------------------------------------
+# mesh construction
+# ---------------------------------------------------------------------------
+
+@needs4
+def test_sweep_mesh_shapes():
+    """Default is (D, 1); any factorization of D is accepted; anything
+    else is a ValueError, not a silent fallback."""
+    assert shax.sweep_mesh().devices.shape == (jax.device_count(), 1)
+    assert shax.sweep_mesh(shape=(2, 2)).devices.shape == (2, 2)
+    assert shax.sweep_mesh(shape=(1, 4)).devices.shape == (1, 4)
+    for bad in ((3, 2), (4, 2), (0, 4), (-2, -2)):
+        with pytest.raises(ValueError):
+            shax.sweep_mesh(shape=bad)
+
+
+def test_axis_rules_product_shard():
+    """The logical-axis table: 'batch' product-shards over both named
+    axes, 'config'/'trial' map to their own axis."""
+    assert shax.batch_spec() == jax.sharding.PartitionSpec(
+        (shax.CONFIG_AXIS, shax.TRIAL_AXIS))
+    assert shax.grid_spec() == jax.sharding.PartitionSpec(
+        shax.CONFIG_AXIS, shax.TRIAL_AXIS)
+    assert shax.config_spec() == jax.sharding.PartitionSpec(
+        shax.CONFIG_AXIS)
+
+
+# ---------------------------------------------------------------------------
+# sharded_sweep on the 2-D mesh
+# ---------------------------------------------------------------------------
+
+@needs4
+def test_sweep_2d_equals_1d_equals_unsharded():
+    axes = _grid8()
+    res_un = sweep(axes)
+    res_1d = sharded_sweep(axes)                      # default (4, 1)
+    res_2d = sharded_sweep(axes, mesh_shape=(2, 2))
+    res_t4 = sharded_sweep(axes, mesh_shape=(1, 4))
+    _assert_sweeps_equal(res_un, res_1d)
+    _assert_sweeps_equal(res_un, res_2d)
+    _assert_sweeps_equal(res_un, res_t4)
+
+
+@needs4
+def test_sweep_chunked_dispatch_matches_one_shot():
+    """chunk_size=3 on 4 devices rounds up to 4-config chunks and pads
+    the 8-config batch to two dispatches; result identical to the
+    single-dispatch path."""
+    axes = _grid8()
+    res_one = sharded_sweep(axes, mesh_shape=(2, 2))
+    res_chk = sharded_sweep(axes, mesh_shape=(2, 2), chunk_size=3)
+    _assert_sweeps_equal(res_one, res_chk)
+
+
+@needs4
+def test_sweep_2d_remainder_batch():
+    """5 configurations on a 2×2 mesh: pad to 8, drop the replicas."""
+    axes = SweepAxes.zip(
+        designs=[h.get_design("4N/3"), h.get_design("3+1"),
+                 h.get_design("4N/3"), h.get_design("3+1"),
+                 h.get_design("10N/8")],
+        envs=[_env(proj.MED)],
+        policies=[pl.POLICY_VAR_MIN, pl.POLICY_VAR_MIN,
+                  pl.POLICY_MIN_WASTE, pl.POLICY_VAR_MIN,
+                  pl.POLICY_VAR_MIN],
+        seeds=[0, 0, 0, 1, 0])
+    res_un = sweep(axes)
+    res_2d = sharded_sweep(axes, mesh_shape=(2, 2))
+    assert len(res_2d) == 5
+    _assert_sweeps_equal(res_un, res_2d)
+
+
+@needs4
+def test_sweep_streaming_under_2d_mesh():
+    """The streaming histogram path composes with 2-D sharding: sharded
+    streaming ≡ unsharded streaming (tight), and within one bin of the
+    exact quantiles."""
+    axes = _grid8()
+    res_s = sharded_sweep(axes, mesh_shape=(2, 2), exact_quantiles=False)
+    res_u = sweep(axes, exact_quantiles=False)
+    _assert_sweeps_equal(res_u, res_s)
+    exact = sweep(axes)
+    tol = 1.0 / qt.DEFAULT_BINS + 1e-6
+    for attr in ("p50_stranding", "p90_stranding"):
+        e = getattr(exact, attr)
+        s = getattr(res_s, attr)
+        ok = ~np.isnan(e)
+        np.testing.assert_array_equal(np.isnan(e), np.isnan(s))
+        np.testing.assert_allclose(s[ok], e[ok], atol=tol, err_msg=attr)
+
+
+def test_sweep_single_device_passthrough():
+    """devices=[one] is byte-for-byte `sweep`, whatever the host device
+    count; streaming statics are forwarded through the passthrough."""
+    axes = SweepAxes.zip(designs=[h.get_design("4N/3")],
+                         envs=[_env(proj.MED), _env(proj.HIGH)])
+    res_s = sharded_sweep(axes, devices=jax.devices()[:1],
+                          exact_quantiles=False)
+    res_b = sweep(axes, exact_quantiles=False)
+    np.testing.assert_array_equal(res_s.final_deployed_mw,
+                                  res_b.final_deployed_mw)
+    np.testing.assert_array_equal(res_s.p90_stranding, res_b.p90_stranding)
+    np.testing.assert_array_equal(res_s.n_halls_built, res_b.n_halls_built)
+
+
+# ---------------------------------------------------------------------------
+# sharded_mc_sweep on the 2-D mesh
+# ---------------------------------------------------------------------------
+
+MC_KW = dict(n_trials=6, n_events=120, year=2030, scenario=proj.HIGH)
+
+
+def _mc_axes3():
+    return MCAxes.zip(
+        designs=[h.get_design(n) for n in ("4N/3", "3+1", "10N/8")],
+        policies=[pl.POLICY_VAR_MIN, pl.POLICY_MIN_WASTE,
+                  pl.POLICY_VAR_MIN],
+        seeds=[11, 11, 13])
+
+
+@needs4
+def test_mc_2d_equals_flat_equals_unsharded():
+    """B=3 (config remainder on dc=2), T=6: grid path ≡ flat product
+    sharding ≡ unsharded."""
+    axes = _mc_axes3()
+    res_un = mc_sweep(axes, **MC_KW)
+    res_flat = sharded_mc_sweep(axes, **MC_KW)        # default (4, 1)
+    res_2d = sharded_mc_sweep(axes, mesh_shape=(2, 2), **MC_KW)
+    _assert_mc_equal(res_un, res_flat)
+    _assert_mc_equal(res_un, res_2d)
+
+
+@needs4
+def test_mc_2d_trial_remainder():
+    """T=5 on dt=2 pads the trial axis to 6 and drops the replica
+    column; every real trial matches the unsharded grid."""
+    kw = dict(MC_KW, n_trials=5)
+    axes = _mc_axes3()
+    res_un = mc_sweep(axes, **kw)
+    res_2d = sharded_mc_sweep(axes, mesh_shape=(2, 2), **kw)
+    assert res_2d.hall_stranding.shape[:2] == (3, 5)
+    _assert_mc_equal(res_un, res_2d)
+
+
+@needs4
+def test_mc_pod_path_under_2d_mesh():
+    """The split-pods fast path composes with the 2-D grid layout."""
+    kw = dict(MC_KW, n_trials=4, pod_racks=8)
+    axes = MCAxes.zip(designs=[h.get_design("4N/3"), h.get_design("3+1")],
+                      seeds=[5, 7])
+    res_un = mc_sweep(axes, **kw)
+    res_2d = sharded_mc_sweep(axes, mesh_shape=(2, 2), **kw)
+    _assert_mc_equal(res_un, res_2d)

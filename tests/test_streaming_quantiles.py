@@ -1,0 +1,246 @@
+"""Property tests for the streaming quantile estimators (ISSUE 8).
+
+Two layers of obligation:
+
+* estimator-level — `quantiles.hist_masked_quantiles` must stay within
+  its documented hard bound (one bin width) of ``np.percentile`` on ANY
+  masked [0, 1] stream, and `quantiles.p2_stream_quantiles` must track
+  ``np.percentile`` on random streams from several distribution
+  families with a tolerance that shrinks as the stream grows (P²
+  carries no hard bound, so the obligation is statistical, not
+  adversarial).
+* fleet-level — with the default ``exact_quantiles=True`` the lifecycle
+  results must be bitwise what the PR 5 goldens pinned, and the
+  streaming path must agree with the exact path within one histogram
+  bin on every month while leaving all non-quantile outputs untouched.
+
+The properties run twice: through hypothesis (shrinking, adversarial
+search) when it is installed, and through an always-on seeded fallback
+harness (fixed adversarial cases + RandomState case generator) so the
+obligations are enforced even on images without the dev extras.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # dev extra; the seeded harness still runs
+    HAVE_HYPOTHESIS = False
+
+import jax
+
+from repro.core import hierarchy as h, projections as proj
+from repro.core import quantiles as qt
+from repro.core.arrivals import EnvelopeSpec
+from repro.core.fleet import FleetConfig, run_fleet
+
+QS = (50.0, 90.0)
+HIST_PAD = 128     # fixed padded lengths → each estimator jits once
+P2_PAD = 4096
+
+_hist = jax.jit(lambda x, m: qt.hist_masked_quantiles(x, m, QS))
+_p2 = jax.jit(lambda x, m: qt.p2_stream_quantiles(x, m, QS))
+
+
+def _padded(vals, keep, n_pad):
+    x = np.zeros(n_pad, np.float32)
+    m = np.zeros(n_pad, bool)
+    x[:len(vals)] = vals
+    m[:len(vals)] = keep
+    return x, m
+
+
+def _check_hist(vals, keep):
+    """|hist − np.percentile| ≤ (hi − lo)/n_bins on a masked stream."""
+    got = np.asarray(_hist(*_padded(vals, keep, HIST_PAD)))
+    ref = np.percentile(vals[keep].astype(np.float64), QS)
+    np.testing.assert_allclose(got, ref,
+                               atol=1.0 / qt.DEFAULT_BINS + 1e-6)
+
+
+def _family_stream(family, n, seed):
+    rng = np.random.RandomState(seed)
+    return {
+        "uniform": lambda: rng.uniform(0.0, 1.0, n),
+        "normal": lambda: rng.normal(0.0, 1.0, n),
+        "exponential": lambda: rng.exponential(1.0, n),
+    }[family]().astype(np.float32)
+
+
+def _check_p2(family, n, seed):
+    """P² vs np.percentile on a masked random stream.  No hard bound
+    exists for P², so the tolerance is a function of the stream length:
+    max(0.02, 3/√n) · scale — loose for short streams, ~2% of the
+    distribution scale asymptotically."""
+    vals = _family_stream(family, n, seed)
+    # mask out a deterministic ~1/8 of the stream so the masked-update
+    # path (carry frozen on ok=False) is always exercised
+    keep = (np.arange(n) * 2654435761 % 8) != 0
+    got = np.asarray(_p2(*_padded(vals, keep, P2_PAD)))
+    kept = vals[keep].astype(np.float64)
+    ref = np.percentile(kept, QS)
+    scale = max(1.0, np.std(kept))
+    tol = max(0.02, 3.0 / np.sqrt(keep.sum())) * scale
+    np.testing.assert_allclose(got, ref, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# histogram estimator: hard error bound on arbitrary masked [0, 1] data
+# ---------------------------------------------------------------------------
+
+# fixed adversarial streams a bucketing estimator must survive: point
+# masses, the two-point gap, bin-edge values, near-duplicates
+_HIST_CASES = [
+    np.array([0.5], np.float32),
+    np.zeros(64, np.float32),
+    np.ones(64, np.float32),
+    np.array([0.0] * 9 + [1.0], np.float32),
+    np.array([0.0, 1.0] * 32, np.float32),
+    (np.arange(100, dtype=np.float32) / 99.0),
+    np.repeat(np.float32(1.0 / qt.DEFAULT_BINS) *
+              np.arange(4, dtype=np.float32), 16),
+]
+
+
+@pytest.mark.parametrize("i", range(len(_HIST_CASES)))
+def test_hist_adversarial_cases(i):
+    vals = _HIST_CASES[i]
+    _check_hist(vals, np.ones(len(vals), bool))
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_hist_seeded_streams(seed):
+    """Always-on property harness: random masked [0, 1] streams of
+    random length, including clustered draws."""
+    rng = np.random.RandomState(seed)
+    n = rng.randint(1, HIST_PAD + 1)
+    if seed % 3 == 0:      # clustered around few centers
+        centers = rng.uniform(0.0, 1.0, rng.randint(1, 4))
+        vals = np.clip(rng.choice(centers, n)
+                       + rng.normal(0.0, 1e-3, n), 0.0, 1.0)
+    else:
+        vals = rng.uniform(0.0, 1.0, n)
+    keep = rng.rand(n) < 0.8
+    if not keep.any():
+        keep[0] = True
+    _check_hist(vals.astype(np.float32), keep)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.lists(
+        st.tuples(st.floats(0.0, 1.0, allow_nan=False, width=32),
+                  st.booleans()),
+        min_size=1, max_size=HIST_PAD))
+    @settings(max_examples=60, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def test_hist_hypothesis_streams(pairs):
+        """Shrinking adversarial search over masked [0, 1] streams."""
+        vals = np.array([v for v, _ in pairs], np.float32)
+        keep = np.array([k for _, k in pairs], bool)
+        if not keep.any():
+            keep[0] = True
+        _check_hist(vals, keep)
+
+
+def test_hist_all_masked_is_nan():
+    x = np.full(HIST_PAD, 0.5, np.float32)
+    got = np.asarray(_hist(x, np.zeros(HIST_PAD, bool)))
+    assert np.isnan(got).all()
+
+
+# ---------------------------------------------------------------------------
+# P² estimator: statistical tracking, tolerance shrinking with n
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ["uniform", "normal", "exponential"])
+@pytest.mark.parametrize("n,seed", [(8, 0), (37, 1), (200, 2),
+                                    (1023, 3), (P2_PAD, 4)])
+def test_p2_seeded_streams(family, n, seed):
+    """Always-on property harness over distribution families × stream
+    lengths (the tolerance tightens as n grows)."""
+    _check_p2(family, n, seed)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.sampled_from(["uniform", "normal", "exponential"]),
+           st.integers(8, P2_PAD), st.integers(0, 2**31 - 1))
+    @settings(max_examples=30, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def test_p2_hypothesis_streams(family, n, seed):
+        _check_p2(family, n, seed)
+
+
+@pytest.mark.parametrize("n,seed", [(1, 0), (2, 1), (3, 2), (4, 3),
+                                    (4, 4), (1, 5)])
+def test_p2_small_stream_is_exact(n, seed):
+    """Streams shorter than five valid observations bypass the marker
+    machinery entirely: the sorted bootstrap buffer yields the exact
+    'linear' quantile."""
+    vals = np.random.RandomState(seed).uniform(0.0, 1.0, n) \
+        .astype(np.float32)
+    got = np.asarray(_p2(*_padded(vals, np.ones(n, bool), P2_PAD)))
+    ref = np.percentile(vals.astype(np.float64), QS)
+    np.testing.assert_allclose(got, ref, atol=1e-5)
+
+
+def test_p2_all_masked_is_nan():
+    x = np.full(P2_PAD, 0.5, np.float32)
+    got = np.asarray(_p2(x, np.zeros(P2_PAD, bool)))
+    assert np.isnan(got).all()
+
+
+# ---------------------------------------------------------------------------
+# fleet integration: exact default pins the goldens, streaming tracks it
+# ---------------------------------------------------------------------------
+
+GOLDEN_ENV = EnvelopeSpec(demand_scale=0.01, gpu_scenario=proj.HIGH)
+
+
+@pytest.fixture(scope="module")
+def golden_runs():
+    cfg = FleetConfig(h.get_design("3+1"), GOLDEN_ENV, seed=3)
+    return (run_fleet(cfg),
+            run_fleet(cfg, exact_quantiles=True),
+            run_fleet(cfg, exact_quantiles=False))
+
+
+def test_exact_mode_is_the_default_and_pins_goldens(golden_runs):
+    """`exact_quantiles=True` must be bitwise the default path — the PR 5
+    golden tail quantiles included."""
+    default, exact, _ = golden_runs
+    np.testing.assert_array_equal(default.p50_stranding,
+                                  exact.p50_stranding)
+    np.testing.assert_array_equal(default.p90_stranding,
+                                  exact.p90_stranding)
+    np.testing.assert_array_equal(default.halls_active, exact.halls_active)
+    assert exact.n_halls_built == 14
+    np.testing.assert_allclose(exact.final_deployed_mw, 77.8758, atol=0.01)
+    np.testing.assert_allclose(exact.p50_stranding[-1], 0.2407, atol=2e-3)
+    np.testing.assert_allclose(exact.p90_stranding[-1], 0.3062, atol=2e-3)
+
+
+def test_streaming_within_one_bin_of_exact(golden_runs):
+    """Streaming histogram p50/p90 within one bin width of the exact
+    post-hoc reduction on every month (NaN months — no active halls —
+    must coincide)."""
+    _, exact, stream = golden_runs
+    tol = 1.0 / qt.DEFAULT_BINS + 1e-6
+    for attr in ("p50_stranding", "p90_stranding"):
+        e, s = getattr(exact, attr), getattr(stream, attr)
+        np.testing.assert_array_equal(np.isnan(e), np.isnan(s),
+                                      err_msg=attr)
+        ok = ~np.isnan(e)
+        np.testing.assert_allclose(s[ok], e[ok], atol=tol, err_msg=attr)
+
+
+def test_streaming_leaves_non_quantile_outputs_bitwise(golden_runs):
+    """The streaming path only changes what the scan emits for the two
+    quantile channels; every other output is the same program."""
+    _, exact, stream = golden_runs
+    assert exact.n_halls_built == stream.n_halls_built
+    np.testing.assert_array_equal(exact.halls_active, stream.halls_active)
+    np.testing.assert_array_equal(exact.deployed_mw, stream.deployed_mw)
+    np.testing.assert_array_equal(exact.final_hall_stranding,
+                                  stream.final_hall_stranding)
