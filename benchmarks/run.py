@@ -828,6 +828,123 @@ def giant_grid():
              f"err={type(e).__name__}")
 
 
+def _resilience_grid(n_cfg):
+    """The giant_grid --smoke geometry (trace pool × 2 designs, short
+    horizon) shared by the `resilience_*` legs, so the resume leg and
+    the overhead leg reuse one compiled chunk executable."""
+    pool = [(sc, sd) for sc in (proj.MED, proj.HIGH)
+            for sd in (41, 42, 43, 44)]
+    envs_pool = [EnvelopeSpec(demand_scale=0.01, gpu_scenario=sc,
+                              end_year=2028) for sc, _ in pool]
+    traces_pool = [generate_fleet_trace(e, sd)
+                   for e, (_, sd) in zip(envs_pool, pool)]
+    idx = [i % len(pool) for i in range(n_cfg)]
+    axes = SweepAxes.zip(
+        designs=[hierarchy.get_design(("4N/3", "3+1")[i % 2])
+                 for i in range(n_cfg)],
+        envs=[envs_pool[j] for j in idx],
+        seeds=[pool[j][1] for j in idx])
+    return axes, [traces_pool[j] for j in idx]
+
+
+@bench
+def resilience_overhead():
+    """Acceptance (ISSUE 9): per-chunk checkpointing must cost ≤ ~10%
+    over the same chunked run without durability.  Both legs go through
+    `resilient_sweep` on the giant_grid --smoke geometry (so the only
+    delta is the atomic write-temp→rename→fsync commit per chunk), the
+    ratio row carries its own `min=0.9` floor for
+    tools/check_speedups.py, and the two results must be bitwise equal
+    — durability cannot change a single bit of the output."""
+    import shutil
+    import tempfile
+
+    from repro.core.resilience import resilient_sweep
+
+    n_cfg, chunk = (128, 32) if SMOKE else (512, 128)
+    axes, traces = _resilience_grid(n_cfg)
+    kw = dict(chunk_size=chunk, traces=traces, exact_quantiles=False)
+
+    resilient_sweep(axes, **kw)                     # compile warm-up
+    t0 = time.time()
+    res_off = resilient_sweep(axes, **kw)
+    t_off = time.time() - t0
+
+    ckdir = tempfile.mkdtemp(prefix="resilience_bench_")
+    try:
+        t0 = time.time()
+        res_on = resilient_sweep(axes, checkpoint_dir=ckdir, **kw)
+        t_on = time.time() - t0
+        n_steps = len([n for n in os.listdir(ckdir)
+                       if n.startswith("step_")])
+    finally:
+        shutil.rmtree(ckdir, ignore_errors=True)
+
+    bitwise = all(
+        np.array_equal(np.asarray(getattr(res_off, f)),
+                       np.asarray(getattr(res_on, f)))
+        for f in ("final_deployed_mw", "deployed_mw", "p90_stranding",
+                  "n_halls_built", "total_capex"))
+    assert bitwise, "checkpointing changed the sweep output"
+    emit("resilience.ckpt_off", t_off / n_cfg * 1e6,
+         f"n_cfg={n_cfg};chunk={chunk};wall_s={t_off:.2f}")
+    emit("resilience.ckpt_on", t_on / n_cfg * 1e6,
+         f"wall_s={t_on:.2f};chunks_committed={n_steps}")
+    emit("resilience.overhead_speedup", 0,
+         f"ckpt_off_over_on={t_off / t_on:.2f}x;min=0.9;"
+         f"bitwise={bitwise}")
+
+
+@bench
+def resilience_resume():
+    """Acceptance (ISSUE 9): kill-and-resume on the 512-configuration
+    giant_grid --smoke grid — crash injected after chunk 3 commits,
+    the resumed run loads the 3 committed chunks, computes the rest and
+    must be BITWISE identical to the uninterrupted `sweep()` result
+    (asserted here, so the CI resume-smoke leg fails loudly on any
+    drift; also exercised per-boundary in tests/test_resilience.py)."""
+    import shutil
+    import tempfile
+
+    from repro.core.resilience import (FaultPlan, InjectedCrash,
+                                       resilient_sweep)
+
+    n_cfg, chunk = (512, 128) if SMOKE else (1024, 256)
+    axes, traces = _resilience_grid(n_cfg)
+    kw = dict(chunk_size=chunk, traces=traces, exact_quantiles=False)
+
+    ref = sweep(axes, traces=traces, exact_quantiles=False)
+
+    ckdir = tempfile.mkdtemp(prefix="resilience_resume_")
+    try:
+        t0 = time.time()
+        crashed = False
+        try:
+            resilient_sweep(axes, checkpoint_dir=ckdir,
+                            fault_plan=FaultPlan(crash_after=2), **kw)
+        except InjectedCrash:
+            crashed = True
+        assert crashed, "injected crash did not fire"
+        res = resilient_sweep(axes, checkpoint_dir=ckdir, **kw)
+        wall = time.time() - t0
+    finally:
+        shutil.rmtree(ckdir, ignore_errors=True)
+
+    fields = ("halls_active", "deployed_mw", "p50_stranding",
+              "p90_stranding", "n_halls_built", "final_deployed_mw",
+              "placed_fraction", "total_capex", "dollars_per_tps")
+    bitwise = all(np.array_equal(np.asarray(getattr(res, f)),
+                                 np.asarray(getattr(ref, f)))
+                  for f in fields)
+    assert bitwise, "resumed sweep diverged from the uninterrupted run"
+    r = res.report
+    assert r.chunks_resumed == 3, r
+    emit("resilience.resume", wall / n_cfg * 1e6,
+         f"n_cfg={n_cfg};chunk={chunk};wall_s={wall:.1f};"
+         f"chunks_resumed={r.chunks_resumed};"
+         f"chunks_computed={r.chunks_computed};bitwise={bitwise}")
+
+
 @bench
 def scenario_sweep():
     """Beyond-the-paper scenario frontier (docs/scenarios.md): baseline +

@@ -17,16 +17,23 @@ Design (1000+-node deployment):
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
 import threading
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class ChecksumError(RuntimeError):
+    """A committed checkpoint's payload does not match its manifest
+    checksum — a torn/corrupted write.  Callers treat the step as not
+    done (recompute) rather than deserializing garbage."""
 
 # numpy's npz cannot represent ml_dtypes (bfloat16, fp8): store raw bytes
 # (uint8 view) and re-view on restore using the manifest dtype.
@@ -46,11 +53,20 @@ def _decode(x: np.ndarray, dtype_str: str):
 
 COMMIT = "COMMIT"
 MANIFEST = "manifest.json"
+LEAVES = "leaves.npz"
 
 
 def _flatten(tree):
     leaves, treedef = jax.tree.flatten(tree)
     return leaves, treedef
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
 
 
 class Checkpointer:
@@ -82,12 +98,17 @@ class Checkpointer:
                 if os.path.exists(p):
                     shutil.rmtree(p)      # re-save of the same step
             os.makedirs(tmp)
-            np.savez(os.path.join(tmp, "leaves.npz"),
+            np.savez(os.path.join(tmp, LEAVES),
                      **{f"leaf_{i}": _encode(x)
                         for i, x in enumerate(host_leaves)})
+            # checksum the serialized payload so restore/load can tell a
+            # torn write from a committed checkpoint
+            meta["sha256"] = _sha256(os.path.join(tmp, LEAVES))
             with open(os.path.join(tmp, MANIFEST), "w") as f:
                 json.dump(meta, f)
-            os.rename(tmp, final)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, final)        # atomic publish
             with open(os.path.join(final, COMMIT), "w") as f:
                 f.write(str(meta["time"]))
                 f.flush()
@@ -126,18 +147,42 @@ class Checkpointer:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def _read(self, step: int, verify: bool):
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, MANIFEST)) as f:
+            meta = json.load(f)
+        leaves_path = os.path.join(path, LEAVES)
+        # pre-checksum checkpoints (older writers) skip verification
+        if verify and "sha256" in meta and _sha256(leaves_path) != meta["sha256"]:
+            raise ChecksumError(
+                f"checkpoint step {step} in {self.dir}: payload checksum "
+                f"mismatch (torn write); treat as not done")
+        return np.load(leaves_path), meta
+
+    def load(self, step: Optional[int] = None,
+             verify: bool = True) -> Tuple[List[np.ndarray], dict]:
+        """Host-side read of a committed checkpoint: `(leaves, meta)` —
+        the flat numpy leaf list plus the manifest — with no device
+        placement and no target structure required (the resilient sweep
+        path stores plain dict-of-array slabs).  `verify=True` checks
+        the payload checksum and raises `ChecksumError` on mismatch."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        data, meta = self._read(step, verify)
+        leaves = [_decode(data[f"leaf_{i}"], meta["dtypes"][i])
+                  for i in range(meta["n_leaves"])]
+        return leaves, meta
+
     def restore(self, target: Any, step: Optional[int] = None,
-                shardings: Any = None):
+                shardings: Any = None, verify: bool = True):
         """Restore into the structure of `target` (a pytree of arrays or
         ShapeDtypeStructs).  `shardings`: optional matching pytree of
         shardings for elastic re-placement on the current mesh."""
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
-        path = os.path.join(self.dir, f"step_{step:08d}")
-        data = np.load(os.path.join(path, "leaves.npz"))
-        with open(os.path.join(path, MANIFEST)) as f:
-            meta = json.load(f)
+        data, meta = self._read(step, verify)
         leaves, treedef = _flatten(target)
         if len(leaves) != len(data.files):
             raise ValueError(

@@ -3,10 +3,13 @@ for the AI Era": hierarchy/redundancy modelling, multi-resource placement,
 single-hall and fleet lifecycle simulation, cost and throughput models."""
 
 from . import (arrivals, calibration, cost, fleet, hierarchy, mc_sweep,
-               payoff, placement, projections, quantiles, resources,
-               scenarios, singlehall, sweep, throughput)
-from .hierarchy import (DESIGNS, DesignSpec, build_topology, design_3p1,
-                        design_4n3, design_8p2, design_10n8, get_design)
+               payoff, placement, projections, quantiles, resilience,
+               resources, scenarios, singlehall, sweep, throughput)
+from .hierarchy import (DESIGNS, DesignSpec, SweepValidationError,
+                        build_topology, design_3p1, design_4n3, design_8p2,
+                        design_10n8, get_design)
+from .resilience import (FaultPlan, RunReport, resilient_mc_sweep,
+                         resilient_sweep)
 from .placement import (DEFAULT_POLICY, POLICY_MIN_WASTE, POLICY_NAMES,
                         POLICY_RANDOM, POLICY_ROUND_ROBIN, POLICY_VAR_MIN,
                         Deployment, HallState, place)
@@ -15,11 +18,12 @@ from .sweep import SweepAxes, SweepResult
 
 __all__ = [
     "arrivals", "calibration", "cost", "fleet", "hierarchy", "mc_sweep",
-    "payoff", "placement", "projections", "quantiles", "resources",
-    "scenarios", "singlehall", "sweep", "throughput",
-    "DESIGNS", "DesignSpec", "build_topology", "get_design",
-    "design_4n3", "design_3p1", "design_10n8", "design_8p2",
+    "payoff", "placement", "projections", "quantiles", "resilience",
+    "resources", "scenarios", "singlehall", "sweep", "throughput",
+    "DESIGNS", "DesignSpec", "SweepValidationError", "build_topology",
+    "get_design", "design_4n3", "design_3p1", "design_10n8", "design_8p2",
     "Deployment", "HallState", "place", "DEFAULT_POLICY", "POLICY_NAMES",
     "POLICY_RANDOM", "POLICY_ROUND_ROBIN", "POLICY_MIN_WASTE",
     "POLICY_VAR_MIN", "SweepAxes", "SweepResult", "MCAxes", "MCResult",
+    "FaultPlan", "RunReport", "resilient_sweep", "resilient_mc_sweep",
 ]

@@ -141,6 +141,59 @@ class EnvelopeSpec:
         """Simulated month count of the buildout horizon."""
         return (self.end_year - self.start_year + 1) * 12
 
+    def validate(self) -> "EnvelopeSpec":
+        """Raise `SweepValidationError` on an unsatisfiable envelope."""
+        from .hierarchy import SweepValidationError, _require
+        e = self
+        _require(e.end_year >= e.start_year, "end_year",
+                 f"non-monotone buildout horizon: end_year {e.end_year} "
+                 f"precedes start_year {e.start_year}")
+        _require(e.demand_scale > 0, "demand_scale",
+                 f"non-positive demand_scale {e.demand_scale}")
+        _require(e.gpu_gw >= 0 and e.compute_gw >= 0 and e.storage_gw >= 0,
+                 "gpu_gw", f"negative per-class demand (gpu_gw={e.gpu_gw}, "
+                 f"compute_gw={e.compute_gw}, storage_gw={e.storage_gw})")
+        _require(e.gpu_gw + e.compute_gw + e.storage_gw > 0, "gpu_gw",
+                 "zero total demand; nothing would ever arrive")
+        for cid in (CLASS_GPU, CLASS_COMPUTE, CLASS_STORAGE):
+            _require(cid in e.growth, "growth",
+                     f"growth is missing class id {cid}")
+            _require(e.growth[cid] > 0, "growth",
+                     f"non-positive growth factor {e.growth[cid]} for "
+                     f"class id {cid}")
+        for fld, sc in (("gpu_scenario", e.gpu_scenario),
+                        ("nongpu_scenario", e.nongpu_scenario)):
+            _require(sc in proj.SCENARIOS, fld,
+                     f"unknown scenario {sc!r}; have {list(proj.SCENARIOS)}")
+        from .placement import MAX_POD_RACKS
+        _require(1 <= e.pod_racks <= MAX_POD_RACKS, "pod_racks",
+                 f"pod_racks {e.pod_racks} outside [1, MAX_POD_RACKS="
+                 f"{MAX_POD_RACKS}]; the pod window would exceed the "
+                 f"placement scan length")
+        _require(e.quantum_racks >= 1, "quantum_racks",
+                 f"non-positive quantum_racks {e.quantum_racks}")
+        _require(0.0 <= e.la_fraction <= 1.0, "la_fraction",
+                 f"la_fraction {e.la_fraction} outside [0, 1]")
+        _require(e.shock_month < e.n_months, "shock_month",
+                 f"shock_month {e.shock_month} is past the horizon "
+                 f"({e.n_months} months)")
+        _require(e.shock_multiplier >= 0, "shock_multiplier",
+                 f"negative shock_multiplier {e.shock_multiplier}")
+        _require(e.shock_ramp_months >= 0, "shock_ramp_months",
+                 f"negative shock_ramp_months {e.shock_ramp_months}")
+        _require(e.cohort_window_m >= 0, "cohort_window_m",
+                 f"negative cohort_window_m {e.cohort_window_m}")
+        _require(e.refresh_cycle_m >= 0, "refresh_cycle_m",
+                 f"negative refresh_cycle_m {e.refresh_cycle_m}")
+        if e.mix_end is not None:
+            _require(len(e.mix_end) == 3, "mix_end",
+                     f"mix_end needs (gpu, compute, storage) shares, got "
+                     f"{len(e.mix_end)} entries")
+            _require(all(s >= 0 for s in e.mix_end) and sum(e.mix_end) > 0,
+                     "mix_end", f"mix_end shares {e.mix_end} must be "
+                     f"non-negative and sum positive")
+        return e
+
     def annual_targets_kw(self, class_id: int) -> np.ndarray:
         """Per-year arrival power targets [kW] for one hardware class.
 

@@ -32,6 +32,26 @@ from .resources import (AIR, AIR_CFM_PER_KW, LIQ, LIQ_LPM_PER_RACK, N_RES,
 MAX_FEEDS = 4
 
 
+class SweepValidationError(ValueError):
+    """A sweep input failed validation before any compile time was spent.
+
+    `field` names the offending spec field (e.g. ``"lineup_kw"`` or
+    ``"envs"``); `message` is the human-readable diagnosis.  Subclasses
+    ValueError so pre-existing ``pytest.raises(ValueError)`` call sites
+    keep working.
+    """
+
+    def __init__(self, field: str, message: str):
+        self.field = field
+        self.message = message
+        super().__init__(f"{field}: {message}")
+
+
+def _require(ok: bool, field: str, message: str) -> None:
+    if not ok:
+        raise SweepValidationError(field, message)
+
+
 @dataclass(frozen=True)
 class DesignSpec:
     """A power-delivery reference design (paper Table 1 / App. C.2)."""
@@ -75,6 +95,54 @@ class DesignSpec:
         reference GPU rack density (2 LPM per rack)."""
         ref_racks = self.liq_gpu_share * self.ha_capacity_kw / self.liq_ref_rack_kw
         return ref_racks * LIQ_LPM_PER_RACK
+
+    def validate(self) -> "DesignSpec":
+        """Raise `SweepValidationError` on an unbuildable design."""
+        d = self
+        _require(d.kind in ("distributed", "block"), "kind",
+                 f"unknown design kind {d.kind!r}; expected 'distributed' "
+                 f"or 'block'")
+        _require(d.n_lineups >= 1, "n_lineups",
+                 f"design {d.name!r} needs at least one line-up, got "
+                 f"{d.n_lineups}")
+        _require(1 <= d.n_active <= d.n_lineups, "n_active",
+                 f"design {d.name!r} has n_active={d.n_active} outside "
+                 f"[1, n_lineups={d.n_lineups}]")
+        _require(d.lineup_kw > 0, "lineup_kw",
+                 f"design {d.name!r} has non-positive line-up rating "
+                 f"{d.lineup_kw} kW")
+        _require(d.n_domains >= 1, "n_domains",
+                 f"design {d.name!r} needs at least one power domain, got "
+                 f"{d.n_domains}")
+        _require(d.ld_rows >= 0 and d.hd_rows >= 0, "ld_rows",
+                 f"design {d.name!r} has negative row counts "
+                 f"(ld_rows={d.ld_rows}, hd_rows={d.hd_rows})")
+        _require(d.n_rows > 0, "ld_rows",
+                 f"design {d.name!r} has zero rows (ld_rows + hd_rows == 0); "
+                 f"nothing can ever place")
+        _require(d.ld_row_kw > 0 and d.hd_row_kw > 0, "ld_row_kw",
+                 f"design {d.name!r} has non-positive row power caps "
+                 f"(ld_row_kw={d.ld_row_kw}, hd_row_kw={d.hd_row_kw})")
+        _require(d.ld_feeds >= 1 and d.hd_feeds >= 1, "ld_feeds",
+                 f"design {d.name!r} has a zero-feed row class "
+                 f"(ld_feeds={d.ld_feeds}, hd_feeds={d.hd_feeds}); every "
+                 f"row needs at least one upstream line-up")
+        _require(max(d.ld_feeds, d.hd_feeds) <= MAX_FEEDS, "hd_feeds",
+                 f"design {d.name!r} requests more than MAX_FEEDS="
+                 f"{MAX_FEEDS} feeds per row")
+        _require(d.tiles_per_row > 0, "tiles_per_row",
+                 f"design {d.name!r} has non-positive tiles_per_row "
+                 f"{d.tiles_per_row}")
+        _require(d.air_provision_ratio >= 0, "air_provision_ratio",
+                 f"design {d.name!r} has negative air_provision_ratio "
+                 f"{d.air_provision_ratio}")
+        _require(0.0 <= d.liq_gpu_share <= 1.0, "liq_gpu_share",
+                 f"design {d.name!r} has liq_gpu_share {d.liq_gpu_share} "
+                 f"outside [0, 1]")
+        _require(d.liq_ref_rack_kw > 0, "liq_ref_rack_kw",
+                 f"design {d.name!r} has non-positive liq_ref_rack_kw "
+                 f"{d.liq_ref_rack_kw}")
+        return d
 
 
 def _balanced_combos(n: int, r: int, count: int, offset: int = 0):
@@ -120,6 +188,63 @@ class HallTopology:
     def ha_capacity_kw(self) -> float:
         return self.design.ha_capacity_kw * self.n_halls
 
+    def validate(self) -> "HallTopology":
+        """Raise `SweepValidationError` on an internally inconsistent
+        topology (hand-built grids bypassing `build_topology`)."""
+        t = self
+        _require(t.n_halls >= 1, "n_halls",
+                 f"topology needs at least one hall, got {t.n_halls}")
+        R_tot = t.row_cap.shape[0]
+        X_tot = t.lineup_cap.shape[0]
+        _require(R_tot > 0, "row_cap",
+                 "topology has zero rows; nothing can ever place")
+        _require(X_tot > 0, "lineup_cap",
+                 "topology has zero line-ups; no power can be delivered")
+        _require(R_tot % t.n_halls == 0, "row_cap",
+                 f"{R_tot} rows do not tile evenly over {t.n_halls} halls")
+        _require(X_tot % t.n_halls == 0, "lineup_cap",
+                 f"{X_tot} line-ups do not tile evenly over "
+                 f"{t.n_halls} halls")
+        for name, arr, n in (("row_feeds", t.row_feeds, R_tot),
+                             ("row_nfeeds", t.row_nfeeds, R_tot),
+                             ("row_is_hd", t.row_is_hd, R_tot),
+                             ("row_domain", t.row_domain, R_tot),
+                             ("row_hall", t.row_hall, R_tot),
+                             ("lineup_is_active", t.lineup_is_active, X_tot),
+                             ("lineup_hall", t.lineup_hall, X_tot)):
+            _require(arr.shape[0] == n, name,
+                     f"{name} has {arr.shape[0]} entries, expected {n}")
+        _require(t.row_feeds.shape[1] == MAX_FEEDS, "row_feeds",
+                 f"row_feeds second axis is {t.row_feeds.shape[1]}, "
+                 f"expected MAX_FEEDS={MAX_FEEDS}")
+        _require(t.hall_liq_cap.shape[0] == t.n_halls, "hall_liq_cap",
+                 f"hall_liq_cap has {t.hall_liq_cap.shape[0]} entries, "
+                 f"expected n_halls={t.n_halls}")
+        feeds = np.asarray(t.row_feeds)
+        _require(bool(np.all((feeds >= -1) & (feeds < X_tot))), "row_feeds",
+                 f"row_feeds references line-ups outside [-1, {X_tot})")
+        # Real rows (positive power capacity) must be wired to a line-up;
+        # zero-capacity padding rows may legitimately have no feeds.
+        real = np.asarray(t.row_cap)[:, POWER] > 0
+        unfed = real & (np.asarray(t.row_nfeeds) <= 0)
+        _require(not bool(unfed.any()), "row_nfeeds",
+                 f"{int(unfed.sum())} powered row(s) have zero feeds "
+                 f"(first at index {int(np.argmax(unfed))}); every powered "
+                 f"row needs at least one upstream line-up")
+        caps = np.asarray(t.lineup_cap)
+        _require(bool(np.all(caps >= 0)), "lineup_cap",
+                 "negative line-up power caps")
+        active = np.asarray(t.lineup_is_active)
+        dead = active & (caps <= 0)
+        _require(not bool(dead.any()), "lineup_cap",
+                 f"{int(dead.sum())} active line-up(s) have non-positive "
+                 f"power caps (first at index {int(np.argmax(dead))})")
+        _require(bool(active.any()), "lineup_is_active",
+                 "no active line-ups; no load can ever be admitted")
+        _require(0.0 < t.ha_frac <= 1.0, "ha_frac",
+                 f"ha_frac {t.ha_frac} outside (0, 1]")
+        return t
+
 
 def build_topology(design: DesignSpec, n_halls: int = 1,
                    rows_per_hall: int | None = None,
@@ -132,9 +257,9 @@ def build_topology(design: DesignSpec, n_halls: int = 1,
     no feeds (never feasible), padding line-ups are inactive with zero
     rating (contribute nothing to stranding metrics).
     """
-    d = design
-    if d.kind not in ("distributed", "block"):
-        raise ValueError(f"unknown design kind {d.kind!r}")
+    d = design.validate()        # zero-row / zero-feed / bad caps → precise error
+    _require(n_halls >= 1, "n_halls",
+             f"need at least one hall, got {n_halls}")
     if d.kind == "distributed":
         active = list(range(d.n_lineups))
         per_dom = d.n_lineups // d.n_domains
@@ -142,9 +267,13 @@ def build_topology(design: DesignSpec, n_halls: int = 1,
         active = list(range(d.n_active))       # primaries first
         per_dom = d.n_active // d.n_domains
     if per_dom * d.n_domains != len(active):
-        raise ValueError("line-ups must partition evenly into domains")
+        raise SweepValidationError(
+            "n_domains", f"design {d.name!r}: line-ups must partition "
+            f"evenly into {d.n_domains} domains")
     if d.ld_rows % d.n_domains or d.hd_rows % d.n_domains:
-        raise ValueError("rows must partition evenly into domains")
+        raise SweepValidationError(
+            "n_domains", f"design {d.name!r}: rows must partition evenly "
+            f"into {d.n_domains} domains")
 
     ld_per_dom = d.ld_rows // d.n_domains
     hd_per_dom = d.hd_rows // d.n_domains

@@ -40,19 +40,12 @@ from jax.sharding import NamedSharding
 
 from . import arrivals, cost, placement as pl, projections as proj
 from . import throughput as tp
-from .hierarchy import DesignSpec, HallTopology, build_topology
-from .placement import DEFAULT_POLICY, JaxTopology
+from .hierarchy import (DesignSpec, HallTopology, SweepValidationError,
+                        build_topology)
+from .placement import DEFAULT_POLICY, POLICY_NAMES, JaxTopology
 from .singlehall import TraceArrays, run_trial
 from repro.sharding import axes as shax
-
-
-def _broadcast(seq, B, name):
-    seq = list(seq)
-    if len(seq) == 1:
-        seq = seq * B
-    if len(seq) != B:
-        raise ValueError(f"{name} has length {len(seq)}, expected {B} or 1")
-    return seq
+from .sweep import _broadcast
 
 
 @dataclass
@@ -115,6 +108,29 @@ class MCAxes:
                       [c[2] for c in combos], [c[3] for c in combos],
                       [c[0][1] for c in combos])
 
+    def validate(self) -> "MCAxes":
+        """Raise `SweepValidationError` before any compile time is spent
+        (see `sweep.SweepAxes.validate`)."""
+        if len(self) == 0:
+            raise SweepValidationError(
+                "designs", "empty MC sweep: zero configurations")
+        seen: set = set()
+        for d in self.designs:
+            if id(d) not in seen:
+                seen.add(id(d))
+                d.validate()
+        for i, kw in enumerate(self.sku_kw):
+            if kw is not None and kw <= 0:
+                raise SweepValidationError(
+                    "sku_kw", f"sku_kw[{i}] = {kw}: non-positive rack "
+                    f"power override")
+        for i, p in enumerate(self.policies):
+            if not 0 <= p < len(POLICY_NAMES):
+                raise SweepValidationError(
+                    "policies", f"policies[{i}] = {p} outside "
+                    f"[0, {len(POLICY_NAMES)}); have {POLICY_NAMES}")
+        return self
+
 
 @dataclass
 class MCResult:
@@ -133,6 +149,8 @@ class MCResult:
     delivered_tps: np.ndarray = None         # [B, T, Mdl]
     tps_per_provisioned_w: np.ndarray = None  # [B, T, Mdl]
     dollars_per_tps: np.ndarray = None       # [B, T, Mdl]
+    # --- resilient execution (repro.core.resilience) ---
+    report: object = None          # RunReport when run via resilient_mc_sweep
 
     def __len__(self):
         return len(self.axes)
@@ -326,9 +344,8 @@ def _mc_prepare(axes: MCAxes, n_trials: int, n_events: int, year: int,
     made a configuration seeded `s` share its refill trace bitwise with
     configuration `s+1`'s fill trace — correlated trials across
     adjacent-seed grid points."""
+    axes.validate()          # precise SweepValidationErrors, pre-compile
     B = len(axes)
-    if B == 0:
-        raise ValueError("empty MC sweep")
     R_pad = max(d.n_rows for d in axes.designs)
     X_pad = max(d.n_lineups for d in axes.designs)
     staged = [_staged_topology(d, R_pad, X_pad) for d in axes.designs]

@@ -52,8 +52,8 @@ from .arrivals import EnvelopeSpec, Trace, generate_fleet_trace
 from .fleet import (FleetConfig, FleetResult, FleetTrace, _auto_halls,
                     _event_windows, _month_e_max, _pod_scan_len,
                     make_fleet_result, simulate_lifecycle)
-from .hierarchy import DesignSpec, build_topology
-from .placement import DEFAULT_POLICY, MAX_POD_RACKS
+from .hierarchy import DesignSpec, SweepValidationError, build_topology
+from .placement import DEFAULT_POLICY, MAX_POD_RACKS, POLICY_NAMES
 from repro.sharding import axes as shax
 
 
@@ -62,7 +62,9 @@ def _broadcast(seq, B, name):
     if len(seq) == 1:
         seq = seq * B
     if len(seq) != B:
-        raise ValueError(f"{name} has length {len(seq)}, expected {B} or 1")
+        raise SweepValidationError(
+            name, f"has length {len(seq)}, expected {B} (the batch size) "
+            f"or 1 (broadcast)")
     return seq
 
 
@@ -142,6 +144,38 @@ class SweepAxes:
                            policy=self.policies[i], seed=self.seeds[i],
                            harvest=harvest, mature_months=mature_months)
 
+    def validate(self) -> "SweepAxes":
+        """Raise `SweepValidationError` before any compile time is spent.
+
+        Checks every distinct design and envelope (`DesignSpec.validate`
+        / `EnvelopeSpec.validate`), policy ids, and horizon homogeneity.
+        Distinct = by object identity, so a 10⁴-config grid sharing a
+        handful of spec objects validates in microseconds."""
+        if len(self) == 0:
+            raise SweepValidationError(
+                "designs", "empty sweep: zero configurations")
+        seen: set = set()
+        for d in self.designs:
+            if id(d) not in seen:
+                seen.add(id(d))
+                d.validate()
+        for e in self.envs:
+            if id(e) not in seen:
+                seen.add(id(e))
+                e.validate()
+        for i, p in enumerate(self.policies):
+            if not 0 <= p < len(POLICY_NAMES):
+                raise SweepValidationError(
+                    "policies", f"policies[{i}] = {p} outside "
+                    f"[0, {len(POLICY_NAMES)}); have {POLICY_NAMES}")
+        horizons = {(e.start_year, e.end_year) for e in self.envs}
+        if len(horizons) > 1:
+            raise SweepValidationError(
+                "envs", f"envelopes span different horizons: "
+                f"{sorted(horizons)}; the lifecycle scan needs one common "
+                f"month count")
+        return self
+
 
 @dataclass
 class SweepResult:
@@ -168,6 +202,8 @@ class SweepResult:
     delivered_tps: np.ndarray = None         # [B, Mdl] fleet tokens/s
     tps_per_provisioned_w: np.ndarray = None  # [B, Mdl] tokens/s per built W
     dollars_per_tps: np.ndarray = None       # [B, Mdl] capex / delivered TPS
+    # --- resilient execution (repro.core.resilience) ---
+    report: object = None          # RunReport when run via resilient_sweep
 
     def __len__(self):
         return len(self.axes)
@@ -281,19 +317,17 @@ def _prepare(axes: SweepAxes, n_halls_max: int,
     `legacy_pod_cond=True` windows all events together for the
     pre-split reference path (see `simulate_lifecycle`).
     """
+    axes.validate()          # precise SweepValidationErrors, pre-compile
     B = len(axes)
-    if B == 0:
-        raise ValueError("empty sweep")
-    horizons = {(e.start_year, e.end_year) for e in axes.envs}
-    if len(horizons) != 1:
-        raise ValueError(f"envelopes span different horizons: {horizons}")
     months = axes.envs[0].n_months
 
     if traces is None:
         traces = [generate_fleet_trace(e, s)
                   for e, s in zip(axes.envs, axes.seeds)]
     if len(traces) != B:
-        raise ValueError("need one trace per configuration")
+        raise SweepValidationError(
+            "traces", f"need one trace per configuration: got "
+            f"{len(traces)} traces for {B} configurations")
 
     def bucket(n, q):
         return int(np.ceil(max(n, 1) / q) * q)

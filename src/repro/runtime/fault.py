@@ -22,6 +22,33 @@ class NodeFailure(RuntimeError):
     """Raised by a step function when a worker is lost."""
 
 
+@dataclass(frozen=True)
+class Backoff:
+    """Exponential-backoff retry schedule: attempt `i` (0-based) sleeps
+    `min(base_s * factor**i, cap_s)` before retrying, for up to
+    `max_retries` retries after the first attempt.  Shared by the
+    resilient sweep executor (`repro.core.resilience`) and any
+    supervisor retry loop; `base_s=0` keeps test schedules instant
+    while preserving the retry count."""
+    base_s: float = 0.05
+    factor: float = 2.0
+    cap_s: float = 5.0
+    max_retries: int = 3
+
+    def delay(self, attempt: int) -> float:
+        """Sleep before retry `attempt` (0-based)."""
+        return min(self.base_s * self.factor ** attempt, self.cap_s)
+
+    def delays(self):
+        """The full schedule, one delay per allowed retry."""
+        return [self.delay(i) for i in range(self.max_retries)]
+
+    def sleep(self, attempt: int) -> None:
+        d = self.delay(attempt)
+        if d > 0:
+            time.sleep(d)
+
+
 @dataclass
 class StragglerPolicy:
     """Deadline-based straggler detection: a step slower than
@@ -33,23 +60,33 @@ class StragglerPolicy:
     max_flags: int = 3
     _times: List[float] = field(default_factory=list)
     _flags: int = 0
+    _last_flag_step: int = -2
     events: List[dict] = field(default_factory=list)
 
     def observe(self, step: int, seconds: float) -> bool:
+        """Record a step time; True ⇒ fire the mitigation hook.
+
+        "Consecutive" means consecutive *steps*: any fast step — and any
+        gap in the observed step sequence (restart, skipped steps) —
+        resets the streak, so `max_flags` slow steps scattered over an
+        hour never accumulate into a firing.
+        """
         self._times.append(seconds)
         self._times = self._times[-self.window:]
         if len(self._times) < 4:
             return False
         med = statistics.median(self._times[:-1])
-        if seconds > self.threshold * med:
+        slow = seconds > self.threshold * med
+        if not slow or step != self._last_flag_step + 1:
+            self._flags = 0          # streak broken: fast step or step gap
+        if slow:
             self._flags += 1
+            self._last_flag_step = step
             self.events.append({"step": step, "seconds": seconds,
                                 "median": med})
             if self._flags >= self.max_flags:
                 self._flags = 0
                 return True
-        else:
-            self._flags = 0
         return False
 
 
@@ -67,6 +104,9 @@ class Supervisor:
     max_restarts: int = 5
     straggler: StragglerPolicy = field(default_factory=StragglerPolicy)
     on_straggler: Optional[Callable] = None
+    # zero base delay: restart loops in tests stay instant but still
+    # honor the schedule shape when a real deployment raises base_s
+    backoff: Backoff = field(default_factory=lambda: Backoff(base_s=0.0))
 
     def run(self, state, start_step: int, num_steps: int):
         step = start_step
@@ -89,6 +129,7 @@ class Supervisor:
                             step, e, restarts, self.max_restarts)
                 if restarts > self.max_restarts:
                     raise
+                self.backoff.sleep(restarts - 1)
                 state, step = self.restore_fn()
         self.save_fn(step, state)
         return state, step, history, restarts

@@ -8,13 +8,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.checkpointer import Checkpointer
+from repro.checkpoint.checkpointer import (LEAVES, Checkpointer,
+                                           ChecksumError)
 from repro.configs.base import get_smoke_config
 from repro.data.pipeline import PipelineConfig, TokenPipeline
 from repro.models.api import build_model
 from repro.optim import adamw
 from repro.optim.compression import ef_compress_grads, ef_init
-from repro.runtime.fault import NodeFailure, StragglerPolicy, Supervisor
+from repro.runtime.fault import (Backoff, NodeFailure, StragglerPolicy,
+                                 Supervisor)
 from repro.serve.engine import Request, ServeEngine
 from repro.train.step import make_train_step
 
@@ -54,6 +56,37 @@ class TestCheckpointer:
         with pytest.raises(ValueError):
             ckpt.restore({"x": jnp.ones(3), "y": jnp.ones(2)})
 
+    def test_load_returns_host_leaves_and_meta(self, tmp_path):
+        ckpt = Checkpointer(str(tmp_path))
+        ckpt.save(3, {"a": jnp.arange(4.0), "b": jnp.ones(2)},
+                  blocking=True)
+        leaves, meta = ckpt.load()
+        assert meta["step"] == 3 and len(leaves) == 2
+        assert all(isinstance(x, np.ndarray) for x in leaves)
+        np.testing.assert_array_equal(leaves[0], np.arange(4.0))
+
+    def test_torn_payload_raises_checksum_error(self, tmp_path):
+        ckpt = Checkpointer(str(tmp_path))
+        ckpt.save(1, {"x": jnp.arange(8.0)}, blocking=True)
+        payload = tmp_path / "step_00000001" / LEAVES
+        raw = bytearray(payload.read_bytes())
+        raw[-1] ^= 0xFF                       # flip a byte: torn write
+        payload.write_bytes(bytes(raw))
+        with pytest.raises(ChecksumError):
+            ckpt.load(step=1)
+        with pytest.raises(ChecksumError):
+            ckpt.restore({"x": jnp.arange(8.0)}, step=1)
+        # verify=False is an explicit escape hatch
+        leaves, _ = ckpt.load(step=1, verify=False)
+        assert len(leaves) == 1
+
+    def test_no_tmp_dirs_left_after_save(self, tmp_path):
+        ckpt = Checkpointer(str(tmp_path))
+        ckpt.save(1, {"x": jnp.ones(3)}, blocking=True)
+        names = os.listdir(tmp_path)
+        assert not [n for n in names if n.endswith(".tmp")]
+        assert "step_00000001" in names
+
 
 class TestSupervisor:
     def test_restart_on_failure_resumes_from_checkpoint(self, tmp_path):
@@ -86,6 +119,43 @@ class TestSupervisor:
                 fired.append(i)
         assert fired == [8]
         assert pol.events and pol.events[0]["step"] == 8
+
+    def test_straggler_streak_requires_consecutive_steps(self):
+        """Slow steps separated by fast steps (or step gaps) never
+        accumulate into a firing; only a true consecutive run fires."""
+        pol = StragglerPolicy(window=8, threshold=2.0, max_flags=2)
+        fired = []
+        # slow at 8 and 10, fast at 9 in between — streak resets
+        for i in range(12):
+            if pol.observe(i, 5.0 if i in (8, 10) else 1.0):
+                fired.append(i)
+        assert fired == []
+        # slow at 20 and 25 with a gap in step indices — also no firing
+        pol2 = StragglerPolicy(window=8, threshold=2.0, max_flags=2)
+        for i in range(8):
+            pol2.observe(i, 1.0)
+        assert not pol2.observe(20, 5.0)
+        assert not pol2.observe(25, 5.0)
+        # genuinely consecutive slow steps do fire
+        pol3 = StragglerPolicy(window=8, threshold=2.0, max_flags=2)
+        for i in range(8):
+            pol3.observe(i, 1.0)
+        assert not pol3.observe(8, 5.0)
+        assert pol3.observe(9, 5.0)
+
+
+class TestBackoff:
+    def test_schedule_is_exponential_and_capped(self):
+        b = Backoff(base_s=0.1, factor=2.0, cap_s=0.5, max_retries=5)
+        assert b.delays() == [0.1, 0.2, 0.4, 0.5, 0.5]
+
+    def test_zero_base_sleeps_instantly(self):
+        b = Backoff(base_s=0.0, max_retries=3)
+        t0 = time.time()
+        for i in range(3):
+            b.sleep(i)
+        assert time.time() - t0 < 0.05
+        assert b.delays() == [0.0, 0.0, 0.0]
 
 
 class TestCompression:

@@ -8,9 +8,13 @@ floor (default 1.0 — batched/split paths must never be slower than the
 sequential/legacy reference; override with --min).  The gated families
 today: `sweep.speedup`, `mc.speedup`, `pod_sweep.speedup` and
 `mc_pod.speedup` — any future `*speedup*` row is gated automatically.
-Rows whose derived field says `skipped=` (e.g. the sharded probe on a
-1-device host) are ignored.  At least one ratio must be found, so an
-empty or mis-filtered dump also fails.
+A row may carry its own floor as a `min=<floor>` token in its derived
+field (e.g. `resilience.overhead_speedup` gates at 0.9: checkpointing
+is allowed ≤10% overhead, not required to be a speedup); the per-row
+floor overrides the global one.  Rows whose derived field says
+`skipped=` (e.g. the sharded probe on a 1-device host) are ignored.
+At least one ratio must be found, so an empty or mis-filtered dump
+also fails.
 """
 from __future__ import annotations
 
@@ -38,11 +42,13 @@ def check(paths, floor: float) -> int:
                 continue
             found += 1
             ratio = float(m.group(1))
-            ok = ratio >= floor
+            m_floor = re.search(r"(?:^|;)min=([0-9.]+)", derived)
+            row_floor = float(m_floor.group(1)) if m_floor else floor
+            ok = ratio >= row_floor
             print(f"{name}: {ratio:.2f}x "
-                  f"({'ok' if ok else f'BELOW floor {floor}'})")
+                  f"({'ok' if ok else f'BELOW floor {row_floor}'})")
             if not ok:
-                failed.append(f"{name}: {ratio:.2f}x < {floor}")
+                failed.append(f"{name}: {ratio:.2f}x < {row_floor}")
     if not found:
         failed.append("no speedup ratios found in "
                       + ", ".join(paths))
