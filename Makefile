@@ -1,0 +1,37 @@
+# Developer entry points.  Everything here is plain python underneath;
+# the Makefile just pins the invocations CI uses so local runs match
+# the gate exactly.
+PY ?= python
+LINT_PATHS = src tests tools benchmarks examples
+BASELINE = .repro-lint-baseline.json
+
+.PHONY: lint lint-baseline lint-fixtures test test-mesh links
+
+# Trace-safety & determinism lint (docs/static-analysis.md).
+# stdlib-only — needs no installs beyond the repo checkout.
+lint:
+	$(PY) -m tools.repro_lint $(LINT_PATHS) --baseline $(BASELINE)
+
+# Regenerate the baseline (shrink-only: tests assert its total is 0).
+lint-baseline:
+	$(PY) -m tools.repro_lint $(LINT_PATHS) --write-baseline $(BASELINE)
+
+# Self-test of the gate: the bad-fixture corpus must FAIL the linter.
+lint-fixtures:
+	@if $(PY) -m tools.repro_lint tests/fixtures/lint --include-fixtures; \
+	then echo "bad-fixture corpus must fail the linter"; exit 1; \
+	else echo "ok: fixture corpus fires"; fi
+
+# Tier-1 suite under the same forced-device count as CI.
+test:
+	XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# The 2-D mesh / streaming-quantile leg (needs a factorable count).
+test-mesh:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_mesh2d.py \
+	  tests/test_streaming_quantiles.py
+
+links:
+	$(PY) tools/check_links.py

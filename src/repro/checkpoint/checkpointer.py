@@ -55,6 +55,25 @@ COMMIT = "COMMIT"
 MANIFEST = "manifest.json"
 LEAVES = "leaves.npz"
 
+# Manifest keys that may differ between two saves of identical state
+# (wall clock, host identity).  They exist for humans and GC ordering
+# only and MUST stay out of every fingerprint-covered byte: the payload
+# checksum (`sha256`) hashes LEAVES alone, and `manifest_fingerprint`
+# strips these keys, so resume identity never depends on *when* a
+# checkpoint was written (tools/repro_lint rule RL201 polices new
+# wall-clock reads in the deterministic core for the same reason).
+VOLATILE_META = ("time",)
+
+
+def manifest_fingerprint(meta: Dict[str, Any]) -> str:
+    """sha256 over the manifest's deterministic content — everything
+    except `VOLATILE_META` keys.  Two saves of bitwise-identical state
+    produce the same fingerprint regardless of wall clock (regression:
+    tests/test_reliability.py::test_fingerprints_time_independent)."""
+    stable = {k: v for k, v in meta.items() if k not in VOLATILE_META}
+    blob = json.dumps(stable, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()
+
 
 def _flatten(tree):
     leaves, treedef = jax.tree.flatten(tree)

@@ -26,6 +26,10 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--max-seq", type=int, default=96)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for the synthetic request stream (the "
+                         "default reproduces the historical rng(0) "
+                         "stream)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -34,7 +38,7 @@ def main(argv=None):
     engine = ServeEngine(model, params, batch_slots=args.slots,
                          max_seq=args.max_seq, prompt_len=args.prompt_len)
 
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         engine.submit(Request(
             rid, rng.integers(0, cfg.vocab, size=args.prompt_len),

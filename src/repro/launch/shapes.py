@@ -94,13 +94,16 @@ def make_concrete_batch(cfg: ArchConfig, shape_name: str, key,
     B = batch_override or sp.batch
     S = seq_override or sp.seq
     if cfg.family == "audio":
-        return {"frames": jax.random.normal(key, (B, S, cfg.d_model),
+        k_frames, k_tokens = jax.random.split(key)
+        return {"frames": jax.random.normal(k_frames, (B, S, cfg.d_model),
                                             jnp.bfloat16),
                 "tokens": jax.random.randint(
-                    key, (B, min(cfg.dec_max_seq, 64)), 0, cfg.vocab)}
+                    k_tokens, (B, min(cfg.dec_max_seq, 64)), 0, cfg.vocab)}
     if cfg.family == "vlm":
         sv = min(cfg.frontend_seq, S // 2)
-        return {"tokens": jax.random.randint(key, (B, S - sv), 0, cfg.vocab),
+        k_tokens, k_vision = jax.random.split(key)
+        return {"tokens": jax.random.randint(k_tokens, (B, S - sv), 0,
+                                             cfg.vocab),
                 "vision_embeds": jax.random.normal(
-                    key, (B, sv, cfg.d_model), jnp.bfloat16)}
+                    k_vision, (B, sv, cfg.d_model), jnp.bfloat16)}
     return {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab)}

@@ -61,6 +61,12 @@ Rules = Dict[str, AxisVal]
 CONFIG_AXIS = "config"
 TRIAL_AXIS = "trial"
 
+# Pipeline-parallel stage axis (train/pipeline.py's GPipe mesh).  Every
+# mesh-axis name used anywhere in the repo is declared in this module —
+# `tools/repro_lint` rule RL601 rejects axis-name literals it cannot
+# find here, so a typo'd axis can't silently replicate.
+STAGE_AXIS = "stage"
+
 # Logical-axis rules for the sweep engines (the levanter named-axis
 # idiom: engine code names *logical* axes, this table maps them onto
 # mesh axes, `spec_for` builds the PartitionSpecs).  "batch" is a flat

@@ -18,10 +18,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.sharding.axes import shard_map
+from repro.sharding.axes import STAGE_AXIS, shard_map
 
 
-def pipeline(fn_stage: Callable, mesh: Mesh, stage_axis: str = "stage",
+def pipeline(fn_stage: Callable, mesh: Mesh, stage_axis: str = STAGE_AXIS,
              n_microbatches: int = 4):
     """Build a pipelined apply: y = pipe(stage_params, x).
 

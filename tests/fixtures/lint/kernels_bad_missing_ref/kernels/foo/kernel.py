@@ -1,0 +1,5 @@
+"""RL501 + RL503: a kernel package with neither ref.py nor ops.py."""
+
+
+def foo_kernel(x, scale, block_n=128, interpret=False):
+    return x * scale

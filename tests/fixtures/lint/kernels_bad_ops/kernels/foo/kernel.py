@@ -1,0 +1,5 @@
+"""RL503: ops.py exists but exposes no interpret path."""
+
+
+def foo_kernel(x, scale, block_n=128, interpret=False):
+    return x * scale

@@ -1,0 +1,6 @@
+"""Ops wrapper with no `interpret` parameter anywhere: RL503."""
+from .kernel import foo_kernel
+
+
+def foo(x, scale, block_n=128):
+    return foo_kernel(x, scale, block_n=block_n)

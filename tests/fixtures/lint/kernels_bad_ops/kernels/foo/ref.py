@@ -1,0 +1,5 @@
+"""Matching oracle (keeps this tree RL503-only)."""
+
+
+def reference_foo(x, scale):
+    return x * scale

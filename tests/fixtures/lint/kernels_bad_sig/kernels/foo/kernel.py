@@ -1,0 +1,5 @@
+"""RL502: ref.py exists but mirrors nothing (renamed/reordered args)."""
+
+
+def foo_kernel(x, scale, block_n=128, interpret=False):
+    return x * scale

@@ -1,0 +1,6 @@
+"""Well-formed ops wrapper (keeps this tree RL502-only)."""
+from .kernel import foo_kernel
+
+
+def foo(x, scale, block_n=128, interpret=False):
+    return foo_kernel(x, scale, block_n=block_n, interpret=interpret)

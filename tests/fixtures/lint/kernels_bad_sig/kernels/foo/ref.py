@@ -1,0 +1,5 @@
+"""Oracle whose public signature does NOT mirror the kernel entry."""
+
+
+def reference_foo(scale, data):      # reordered + renamed: RL502
+    return data * scale

@@ -1,0 +1,5 @@
+"""Well-formed kernel package: kernel + mirroring ref + interpret ops."""
+
+
+def foo_kernel(x, scale, block_n=128, interpret=False):
+    return x * scale

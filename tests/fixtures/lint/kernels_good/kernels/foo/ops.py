@@ -1,0 +1,6 @@
+"""Ops wrapper exposing the interpret path."""
+from .kernel import foo_kernel
+
+
+def foo(x, scale, block_n=128, interpret=False):
+    return foo_kernel(x, scale, block_n=block_n, interpret=interpret)

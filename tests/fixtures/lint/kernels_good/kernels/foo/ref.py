@@ -1,0 +1,6 @@
+"""Oracle: public params are an ordered subset of the kernel entry's
+(the kernel adds trailing tuning knobs)."""
+
+
+def reference_foo(x, scale):
+    return x * scale

@@ -1,0 +1,3 @@
+"""RL000: a file the checkers cannot parse."""
+def broken(:
+    pass

@@ -1,0 +1,14 @@
+"""RL101: traced-array expression passed to a static_argnames arg."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def run(x, mode="fast"):
+    return x * (2 if mode == "fast" else 3)
+
+
+def caller(x):
+    return run(x, mode=jnp.asarray(1))  # line 14: RL101

@@ -1,0 +1,15 @@
+"""RL101 nearest-miss: statics get hashable Python values."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def run(x, mode="fast"):
+    return x * (2 if mode == "fast" else 3)
+
+
+def caller(x):
+    # static arg is a plain string; the traced arg is positional
+    return run(jnp.asarray(x), mode="slow")

@@ -1,0 +1,17 @@
+"""RL102: Python `if`/`while` on a non-static param of a jitted fn."""
+import functools
+
+import jax
+
+_STATICS = ("flag",)
+
+
+@functools.partial(jax.jit, static_argnames=_STATICS)
+def run(x, n, flag=False):
+    if flag:            # static: fine
+        x = x + 1
+    if n > 0:           # line 14: RL102 (`n` is traced)
+        x = x * 2
+    while n > 1:        # line 16: RL102
+        x = x - 1
+    return x

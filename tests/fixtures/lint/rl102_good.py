@@ -1,0 +1,16 @@
+"""RL102 nearest-miss: trace-safe Python predicates in a jitted fn."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("flag",))
+def run(x, rows=None, flag=False):
+    if flag:                      # declared static
+        x = x + 1
+    if rows is None:              # pytree-structure dispatch: static
+        rows = jnp.arange(x.shape[0])
+    if x.ndim > 1:                # shape metadata: static on tracers
+        x = x.sum(axis=-1)
+    return x[rows]

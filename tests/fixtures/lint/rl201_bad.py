@@ -1,0 +1,7 @@
+# repro-lint: path=src/repro/core/fixture_rl201.py
+"""RL201: wall-clock read inside the deterministic core."""
+import time
+
+
+def stamp(result):
+    return {"result": result, "at": time.time()}  # line 7: RL201

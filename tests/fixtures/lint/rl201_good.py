@@ -1,0 +1,8 @@
+# repro-lint: path=src/repro/launch/fixture_rl201.py
+"""RL201 nearest-miss: the same wall-clock read in launch/ (allowed —
+timing launchers is out of the deterministic core)."""
+import time
+
+
+def stamp(result):
+    return {"result": result, "at": time.time()}

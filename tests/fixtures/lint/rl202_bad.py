@@ -1,0 +1,9 @@
+# repro-lint: path=src/repro/core/fixture_rl202.py
+"""RL202: unseeded / global numpy RNG in the deterministic core."""
+import numpy as np
+
+
+def draw(n):
+    rng = np.random.default_rng()      # line 7: RL202 (unseeded)
+    noise = np.random.rand(n)          # line 8: RL202 (global state)
+    return rng.normal(size=n) + noise

@@ -1,0 +1,9 @@
+# repro-lint: path=src/repro/core/fixture_rl202.py
+"""RL202 nearest-miss: seeded generators are the sanctioned pattern."""
+import numpy as np
+
+
+def draw(n, seed):
+    rng = np.random.default_rng(seed)
+    salted = np.random.default_rng(seed=int(seed) + 1)
+    return rng.normal(size=n) + salted.normal(size=n)

@@ -1,0 +1,7 @@
+# repro-lint: path=src/repro/sharding/fixture_rl203.py
+"""RL203: stdlib `random` in the deterministic core."""
+import random
+
+
+def jitter(xs):
+    return [x + random.random() for x in xs]  # line 7: RL203

@@ -1,0 +1,7 @@
+# repro-lint: path=src/repro/sharding/fixture_rl203.py
+"""RL203 nearest-miss: `jax.random` is NOT the stdlib module."""
+from jax import random
+
+
+def jitter(key, shape):
+    return random.uniform(key, shape)

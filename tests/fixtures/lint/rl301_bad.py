@@ -1,0 +1,14 @@
+"""RL301: key consumed twice without split/fold_in — the refill-trace
+bug class PR 5 fixed."""
+import jax
+
+key = jax.random.PRNGKey(0)
+fill = jax.random.uniform(key, (8,))
+refill = jax.random.normal(key, (8,))     # line 7: RL301
+
+
+def per_step(key, steps):
+    out = []
+    for i in range(steps):
+        out.append(jax.random.uniform(key, ()))  # line 13: RL301 (loop)
+    return out

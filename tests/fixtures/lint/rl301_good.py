@@ -1,0 +1,21 @@
+"""RL301 nearest-miss: split/fold_in between draws, branch-exclusive
+use, and the `key, sub = split(key)` rebinding idiom."""
+import jax
+
+key = jax.random.PRNGKey(0)
+key, k_fill = jax.random.split(key)
+fill = jax.random.uniform(k_fill, (8,))
+refill = jax.random.normal(jax.random.fold_in(key, 1), (8,))
+
+
+def per_step(key, steps, fancy=False):
+    out = []
+    for i in range(steps):
+        out.append(jax.random.uniform(jax.random.fold_in(key, i), ()))
+    return out
+
+
+def branchy(key, fancy):
+    if fancy:
+        return jax.random.normal(key, ())
+    return jax.random.uniform(key, ())

@@ -1,0 +1,11 @@
+# repro-lint: path=src/repro/kernels/fixture/ops.py
+"""RL401: float64 creation in a kernel-reachable module."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def widen(x):
+    hi = x.astype(jnp.float64)              # line 8: RL401
+    pad = jnp.zeros(3, dtype=jnp.float64)   # line 9: RL401
+    one = np.float64(1.0)                   # line 10: RL401
+    return hi + pad + one

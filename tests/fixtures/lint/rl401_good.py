@@ -1,0 +1,14 @@
+# repro-lint: path=src/repro/kernels/fixture/ops.py
+"""RL401 nearest-miss: float32 creation, and the float64 *guard* from
+the real ops.py (a comparison creates nothing)."""
+import jax.numpy as jnp
+
+
+def require_f32(x):
+    if x.dtype == jnp.float64:
+        raise TypeError("cast to float32 first")
+    return x.astype(jnp.float32)
+
+
+def make(n):
+    return jnp.zeros(n, dtype=jnp.float32)

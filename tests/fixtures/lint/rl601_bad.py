@@ -1,0 +1,6 @@
+"""RL601: axis-name literal not declared in sharding/axes.py."""
+import jax
+from jax.sharding import PartitionSpec as P
+
+spec = P("confg")                            # line 5: RL601 (typo)
+mesh = jax.make_mesh((1, 1), ("config", "trils"))  # line 6: RL601

@@ -1,0 +1,12 @@
+"""RL601 nearest-miss: declared axes, empty specs, and variables."""
+import jax
+from jax.sharding import PartitionSpec as P
+
+spec = P("config")
+grid = P("config", "trial")
+empty = P()
+mesh = jax.make_mesh((1, 1), ("config", "trial"))
+
+
+def by_name(axis):
+    return P(axis)      # non-literal: out of scope

@@ -1,0 +1,12 @@
+"""Suppression fixture: every violation here carries an inline
+disable, so this file must lint clean."""
+import jax
+
+key = jax.random.PRNGKey(0)
+a = jax.random.uniform(key, (4,))
+b = jax.random.normal(key, (4,))  # repro-lint: disable=RL301
+
+# repro-lint: disable-next-line=RL601
+from jax.sharding import PartitionSpec as P  # noqa: E402
+# repro-lint: disable-next-line=RL601
+spec = P("not-an-axis")

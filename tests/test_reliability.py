@@ -8,8 +8,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.checkpointer import (LEAVES, Checkpointer,
-                                           ChecksumError)
+from repro.checkpoint.checkpointer import (LEAVES, MANIFEST, Checkpointer,
+                                           ChecksumError,
+                                           manifest_fingerprint)
 from repro.configs.base import get_smoke_config
 from repro.data.pipeline import PipelineConfig, TokenPipeline
 from repro.models.api import build_model
@@ -86,6 +87,35 @@ class TestCheckpointer:
         names = os.listdir(tmp_path)
         assert not [n for n in names if n.endswith(".tmp")]
         assert "step_00000001" in names
+
+    def test_fingerprints_time_independent(self, tmp_path, monkeypatch):
+        """Two saves of identical state at different wall clocks must be
+        identical in every fingerprint-covered byte: same leaves.npz
+        bytes, same payload sha256, same manifest_fingerprint.  Only
+        the manifest's volatile `time` key may differ."""
+        import json as _json
+
+        import repro.checkpoint.checkpointer as ckpt_mod
+
+        state = {"a": jnp.arange(10.0), "b": jnp.ones((3, 4))}
+        metas, payloads = [], []
+        for i, fake_now in enumerate((1_000_000.0, 2_000_000.0)):
+            monkeypatch.setattr(ckpt_mod.time, "time", lambda t=fake_now: t)
+            d = tmp_path / f"run{i}"
+            Checkpointer(str(d)).save(5, state, blocking=True)
+            step_dir = d / "step_00000005"
+            payloads.append((step_dir / LEAVES).read_bytes())
+            metas.append(_json.loads((step_dir / MANIFEST).read_text()))
+        assert metas[0]["time"] != metas[1]["time"]  # clocks really moved
+        assert payloads[0] == payloads[1]
+        assert metas[0]["sha256"] == metas[1]["sha256"]
+        assert manifest_fingerprint(metas[0]) == manifest_fingerprint(metas[1])
+        # the fingerprint covers the deterministic keys: corrupting one
+        # changes it, while bumping `time` does not
+        bumped = dict(metas[0], time=123.0)
+        assert manifest_fingerprint(bumped) == manifest_fingerprint(metas[0])
+        assert (manifest_fingerprint(dict(metas[0], step=6))
+                != manifest_fingerprint(metas[0]))
 
 
 class TestSupervisor:

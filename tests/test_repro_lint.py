@@ -1,0 +1,211 @@
+"""Tests for tools/repro_lint: the fixture corpus, suppressions,
+baselines, the CLI, and the committed repo baseline.
+
+The fixture corpus under tests/fixtures/lint/ has one minimal
+good/bad pair per rule.  Bad fixtures pin exact RL### codes *and*
+line numbers so a checker regression (wrong node, wrong scope, off
+by one) fails loudly rather than silently drifting.
+"""
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO))
+
+from tools.repro_lint import (  # noqa: E402
+    RULES,
+    apply_baseline,
+    lint_paths,
+    lint_source,
+    load_baseline,
+    write_baseline,
+)
+from tools.repro_lint.baseline import counts_of  # noqa: E402
+
+FIXTURES = REPO / "tests" / "fixtures" / "lint"
+
+# Every bad fixture, with the exact (code, line) diagnostics it must
+# produce — nothing more, nothing less.
+EXPECTED = {
+    "rl000_bad.py": [("RL000", 2)],
+    "rl101_bad.py": [("RL101", 14)],
+    "rl102_bad.py": [("RL102", 13), ("RL102", 15)],
+    "rl201_bad.py": [("RL201", 7)],
+    "rl202_bad.py": [("RL202", 7), ("RL202", 8)],
+    "rl203_bad.py": [("RL203", 7)],
+    "rl301_bad.py": [("RL301", 7), ("RL301", 13)],
+    "rl401_bad.py": [("RL401", 8), ("RL401", 9), ("RL401", 10)],
+    "rl601_bad.py": [("RL601", 5), ("RL601", 6)],
+    "kernels_bad_missing_ref": [("RL501", 1), ("RL503", 1)],
+    "kernels_bad_sig": [("RL502", 4)],
+    "kernels_bad_ops": [("RL503", 1)],
+}
+
+GOOD = [
+    "rl101_good.py", "rl102_good.py", "rl201_good.py", "rl202_good.py",
+    "rl203_good.py", "rl301_good.py", "rl401_good.py", "rl601_good.py",
+    "suppressed.py", "kernels_good",
+]
+
+
+def lint_fixture(name):
+    return lint_paths([str(FIXTURES / name)], REPO, include_fixtures=True)
+
+
+# ---------------------------------------------------------------- fixtures
+
+@pytest.mark.parametrize("name", sorted(EXPECTED))
+def test_bad_fixture_fires_exact_diagnostics(name):
+    diags = lint_fixture(name)
+    got = sorted((d.code, d.line) for d in diags)
+    assert got == sorted(EXPECTED[name]), (
+        f"{name}: expected {sorted(EXPECTED[name])}, got "
+        f"{[(d.code, d.line, d.message) for d in diags]}")
+
+
+@pytest.mark.parametrize("name", GOOD)
+def test_good_fixture_is_silent(name):
+    diags = lint_fixture(name)
+    assert diags == [], [(d.code, d.line, d.message) for d in diags]
+
+
+def test_every_rule_has_a_firing_fixture():
+    """Meta-test: a rule nobody can trip is a rule nobody maintains."""
+    fired = {code for codes in EXPECTED.values() for code, _ in codes}
+    registered = set(RULES)
+    assert registered == fired, (
+        f"rules without a firing fixture: {sorted(registered - fired)}; "
+        f"fixtures firing unregistered codes: {sorted(fired - registered)}")
+
+
+def test_fixtures_are_skipped_by_default():
+    """tests/fixtures/** is excluded unless include_fixtures is set,
+    so the deliberately-bad corpus never pollutes a real lint run."""
+    diags = lint_paths([str(FIXTURES)], REPO, include_fixtures=False)
+    assert diags == []
+
+
+# ------------------------------------------------------------ suppressions
+
+def test_inline_disable_suppresses_only_that_line():
+    src = (
+        "import jax\n"
+        "key = jax.random.PRNGKey(0)\n"
+        "a = jax.random.uniform(key, (4,))\n"
+        "b = jax.random.normal(key, (4,))  # repro-lint: disable=RL301\n"
+        "c = jax.random.normal(key, (4,))\n"
+    )
+    diags = lint_source(src, "src/repro/core/fake.py", REPO)
+    assert [(d.code, d.line) for d in diags] == [("RL301", 5)]
+
+
+def test_disable_next_line():
+    src = (
+        "import time\n"
+        "# repro-lint: disable-next-line=RL201\n"
+        "t = time.time()\n"
+        "u = time.time()\n"
+    )
+    diags = lint_source(src, "src/repro/core/fake.py", REPO)
+    assert [(d.code, d.line) for d in diags] == [("RL201", 4)]
+
+
+def test_path_pragma_overrides_scope():
+    """The path= pragma makes a fixture lint as if it lived at the
+    given repo path (scope selection only; reported path unchanged)."""
+    src = (
+        "# repro-lint: path=src/repro/launch/fake.py\n"
+        "import time\n"
+        "t = time.time()\n"
+    )
+    diags = lint_source(src, "src/repro/core/fake.py", REPO)
+    assert diags == []  # launch/ is outside the deterministic core
+
+
+# --------------------------------------------------------------- baselines
+
+def test_baseline_round_trip(tmp_path):
+    diags = lint_fixture("rl401_bad.py")
+    assert len(diags) == 3
+    bl = tmp_path / "bl.json"
+    write_baseline(bl, diags)
+    counts = load_baseline(bl)
+    new, stale = apply_baseline(diags, counts)
+    assert new == [] and stale == {}
+
+
+def test_baseline_over_budget_reports_whole_group(tmp_path):
+    diags = lint_fixture("rl401_bad.py")
+    counts = counts_of(diags)
+    key = next(iter(counts))
+    counts[key] -= 1  # budget is now one short
+    new, stale = apply_baseline(diags, counts)
+    assert [d.code for d in new] == ["RL401"] * 3
+    assert stale == {}
+
+
+def test_baseline_stale_surplus_detected():
+    diags = lint_fixture("rl401_bad.py")
+    counts = counts_of(diags)
+    key = next(iter(counts))
+    counts[key] += 2
+    counts["src/repro/gone.py::RL999"] = 1
+    new, stale = apply_baseline(diags, counts)
+    assert new == []
+    assert stale == {key: 2, "src/repro/gone.py::RL999": 1}
+
+
+def test_committed_baseline_is_empty_and_tree_is_clean():
+    """The committed baseline must only ever shrink — and it starts at
+    zero: the real tree lints clean with no grandfathered debt."""
+    counts = load_baseline(REPO / ".repro-lint-baseline.json")
+    assert sum(counts.values()) == 0, (
+        f"baseline grew debt: {counts}")
+    diags = lint_paths(
+        ["src", "tests", "tools", "benchmarks", "examples"], REPO)
+    new, _stale = apply_baseline(diags, counts)
+    assert new == [], [d.format() for d in new]
+
+
+# --------------------------------------------------------------------- CLI
+
+def run_cli(*args):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.repro_lint", *args],
+        cwd=REPO, capture_output=True, text=True)
+
+
+def test_cli_src_is_clean():
+    proc = run_cli("src")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_fixtures_fail_with_findings():
+    proc = run_cli("tests/fixtures/lint", "--include-fixtures")
+    assert proc.returncode == 1
+    assert "RL301" in proc.stdout
+
+
+def test_cli_json_format():
+    proc = run_cli("tests/fixtures/lint", "--include-fixtures",
+                   "--format=json")
+    assert proc.returncode == 1
+    payload = json.loads(proc.stdout)
+    codes = {f["code"] for f in payload["findings"]}
+    assert "RL601" in codes and payload["baselined"] == 0
+
+
+def test_cli_missing_path_is_usage_error():
+    proc = run_cli("no/such/dir")
+    assert proc.returncode == 2
+
+
+def test_cli_list_rules():
+    proc = run_cli("--list-rules")
+    assert proc.returncode == 0
+    for code in RULES:
+        assert code in proc.stdout

@@ -1,0 +1,125 @@
+"""Unit tests for the CI gate tools: exit-code contract and
+offending-row/link reporting for tools/check_speedups.py and
+tools/check_links.py.
+
+Contract (both tools): 0 = clean, 1 = the gate itself failed,
+2 = the input is missing/unreadable.  CI legs rely on the distinction
+to tell "a benchmark regressed" apart from "the dump never got
+written".
+"""
+import json
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "tools"))
+
+import check_links  # noqa: E402
+import check_speedups  # noqa: E402
+
+
+def run_speedups(*args):
+    return subprocess.run(
+        [sys.executable, "tools/check_speedups.py", *args],
+        cwd=REPO, capture_output=True, text=True)
+
+
+def run_links(*args):
+    return subprocess.run(
+        [sys.executable, "tools/check_links.py", *args],
+        cwd=REPO, capture_output=True, text=True)
+
+
+def dump(tmp_path, rows, name="bench.json"):
+    p = tmp_path / name
+    p.write_text(json.dumps(rows))
+    return str(p)
+
+
+# ----------------------------------------------------------- check_speedups
+
+def test_speedups_pass(tmp_path):
+    p = dump(tmp_path, {"sweep.speedup": {"derived": "batched=2.10x"}})
+    proc = run_speedups(p)
+    assert proc.returncode == check_speedups.EXIT_OK
+    assert "2.10x" in proc.stdout
+
+
+def test_speedups_gate_failure_prints_offending_row(tmp_path):
+    p = dump(tmp_path, {
+        "sweep.speedup": {"derived": "batched=2.10x"},
+        "mc.speedup": {"derived": "batched=0.40x"},
+    })
+    proc = run_speedups(p)
+    assert proc.returncode == check_speedups.EXIT_GATE_FAILED
+    assert "mc.speedup" in proc.stderr
+    assert "0.40x" in proc.stderr and "batched=0.40x" in proc.stderr
+
+
+def test_speedups_missing_file_is_exit_2(tmp_path):
+    proc = run_speedups(str(tmp_path / "nope.json"))
+    assert proc.returncode == check_speedups.EXIT_FILE_ERROR
+    assert "cannot read" in proc.stderr
+
+
+def test_speedups_invalid_json_is_exit_2(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text("{not json")
+    proc = run_speedups(str(p))
+    assert proc.returncode == check_speedups.EXIT_FILE_ERROR
+    assert "not valid JSON" in proc.stderr
+
+
+def test_speedups_empty_dump_is_gate_failure(tmp_path):
+    p = dump(tmp_path, {"latency.p50": {"derived": "ms=3.2"}})
+    proc = run_speedups(p)
+    assert proc.returncode == check_speedups.EXIT_GATE_FAILED
+    assert "no speedup ratios found" in proc.stderr
+
+
+def test_speedups_per_row_floor_and_skip(tmp_path):
+    p = dump(tmp_path, {
+        "resilience.overhead_speedup": {"derived": "ckpt=0.95x;min=0.9"},
+        "pod_sweep.speedup": {"derived": "skipped=1-device host"},
+        "sweep.speedup": {"derived": "batched=1.50x"},
+    })
+    proc = run_speedups(p)
+    assert proc.returncode == check_speedups.EXIT_OK, proc.stderr
+
+
+def test_speedups_malformed_row_names_the_row(tmp_path):
+    p = dump(tmp_path, {"mc.speedup": {"derived": "no ratio here"}})
+    proc = run_speedups(p)
+    assert proc.returncode == check_speedups.EXIT_GATE_FAILED
+    assert "mc.speedup" in proc.stderr and "no ratio here" in proc.stderr
+
+
+# -------------------------------------------------------------- check_links
+
+def test_links_clean_tree(tmp_path):
+    (tmp_path / "a.md").write_text("[ok](b.md)\n")
+    (tmp_path / "b.md").write_text("see [a](a.md#top) and [web](https://x)\n")
+    proc = run_links(str(tmp_path))
+    assert proc.returncode == check_links.EXIT_OK
+    assert "0 broken link(s)" in proc.stdout
+
+
+def test_links_broken_link_printed(tmp_path):
+    (tmp_path / "a.md").write_text("[gone](missing.md)\n")
+    proc = run_links(str(tmp_path))
+    assert proc.returncode == check_links.EXIT_BROKEN
+    assert "a.md: broken link -> missing.md" in proc.stdout
+
+
+def test_links_missing_root_is_exit_2(tmp_path):
+    proc = run_links(str(tmp_path / "no_such_root"))
+    assert proc.returncode == check_links.EXIT_BAD_ROOT
+    assert "not a directory" in proc.stderr
+
+
+def test_links_check_api_unchanged(tmp_path):
+    """tests/test_docs.py imports check(root) -> list[str]; keep it."""
+    (tmp_path / "a.md").write_text("[gone](missing.md)\n")
+    errors = check_links.check(tmp_path)
+    assert errors == ["a.md: broken link -> missing.md"]

@@ -1,0 +1,2 @@
+"""Repo tooling: CI gates (check_speedups, check_links) and the
+repro-lint static-analysis pass (`python -m tools.repro_lint`)."""

@@ -5,7 +5,9 @@ files must exist on disk.  External http(s)/mailto links are not fetched
 
     python tools/check_links.py [repo_root]
 
-Exit status 0 iff no broken links.  Also importable:
+Exit status: 0 = no broken links, 1 = broken links found (each is
+printed as `file: broken link -> target`), 2 = the given root does
+not exist or is not a directory.  Also importable:
 `check(root) -> list[str]` returns the broken-link report lines
 (used by tests/test_docs.py).
 """
@@ -14,6 +16,10 @@ from __future__ import annotations
 import pathlib
 import re
 import sys
+
+EXIT_OK = 0
+EXIT_BROKEN = 1
+EXIT_BAD_ROOT = 2
 
 # [text](target) — target up to the first unescaped ')' or whitespace.
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
@@ -42,12 +48,15 @@ def check(root: pathlib.Path) -> list[str]:
 def main(argv: list[str]) -> int:
     root = pathlib.Path(argv[1]) if len(argv) > 1 else \
         pathlib.Path(__file__).resolve().parents[1]
+    if not root.is_dir():
+        print(f"FAIL {root}: not a directory", file=sys.stderr)
+        return EXIT_BAD_ROOT
     errors = check(root)
     for e in errors:
         print(e)
     n_md = len(list(root.rglob("*.md")))
     print(f"# checked {n_md} markdown files, {len(errors)} broken link(s)")
-    return 1 if errors else 0
+    return EXIT_BROKEN if errors else EXIT_OK
 
 
 if __name__ == "__main__":

@@ -15,6 +15,11 @@ floor overrides the global one.  Rows whose derived field says
 `skipped=` (e.g. the sharded probe on a 1-device host) are ignored.
 At least one ratio must be found, so an empty or mis-filtered dump
 also fails.
+
+Exit codes distinguish the failure class so CI logs are unambiguous:
+0 = all gates pass, 1 = a gate failed (ratio below floor, malformed
+row, or no ratios found), 2 = a dump file is missing or unreadable.
+Every failing row is printed with its full derived field.
 """
 from __future__ import annotations
 
@@ -23,12 +28,27 @@ import json
 import re
 import sys
 
+EXIT_OK = 0
+EXIT_GATE_FAILED = 1
+EXIT_FILE_ERROR = 2
+
 
 def check(paths, floor: float) -> int:
     found, failed = 0, []
     for path in paths:
-        with open(path) as f:
-            rows = json.load(f)
+        try:
+            with open(path) as f:
+                rows = json.load(f)
+        except OSError as e:
+            print(f"FAIL {path}: cannot read dump ({e})", file=sys.stderr)
+            return EXIT_FILE_ERROR
+        except json.JSONDecodeError as e:
+            print(f"FAIL {path}: not valid JSON ({e})", file=sys.stderr)
+            return EXIT_FILE_ERROR
+        if not isinstance(rows, dict):
+            print(f"FAIL {path}: expected a JSON object of rows, got "
+                  f"{type(rows).__name__}", file=sys.stderr)
+            return EXIT_FILE_ERROR
         for name, row in sorted(rows.items()):
             if "speedup" not in name:
                 continue
@@ -38,7 +58,8 @@ def check(paths, floor: float) -> int:
                 continue
             m = re.search(r"=([0-9.]+)x", derived)
             if not m:
-                failed.append(f"{name}: no '<ratio>x' in {derived!r}")
+                failed.append(f"{name}: no '<ratio>x' in derived field "
+                              f"{derived!r}")
                 continue
             found += 1
             ratio = float(m.group(1))
@@ -48,13 +69,14 @@ def check(paths, floor: float) -> int:
             print(f"{name}: {ratio:.2f}x "
                   f"({'ok' if ok else f'BELOW floor {row_floor}'})")
             if not ok:
-                failed.append(f"{name}: {ratio:.2f}x < {row_floor}")
+                failed.append(f"{name}: {ratio:.2f}x < floor {row_floor} "
+                              f"(derived: {derived!r})")
     if not found:
         failed.append("no speedup ratios found in "
                       + ", ".join(paths))
     for msg in failed:
         print(f"FAIL {msg}", file=sys.stderr)
-    return 1 if failed else 0
+    return EXIT_GATE_FAILED if failed else EXIT_OK
 
 
 def main(argv=None):

@@ -1,0 +1,25 @@
+"""repro-lint: trace-safety & determinism static analysis for this repo.
+
+The framework's headline guarantees — bitwise-identical resume,
+sweep ≡ sharded_sweep equivalence, jit-cache reuse across bucketed
+grids — rest on source-level contracts (hashable statics, seeded RNG,
+the float32 kernel contract, kernel/ref parity, declared mesh-axis
+names).  This package turns those contracts into machine-checked
+invariants that run before any compile or sweep does:
+
+    python -m tools.repro_lint src tests tools \
+        [--baseline .repro-lint-baseline.json] [--write-baseline FILE] \
+        [--format text|json] [--include-fixtures] [--list-rules]
+
+Rule catalog and suppression guidance: docs/static-analysis.md.
+stdlib-only (`ast`) — no new dependencies.
+"""
+from .baseline import apply as apply_baseline  # noqa: F401
+from .baseline import load as load_baseline    # noqa: F401
+from .baseline import write as write_baseline  # noqa: F401
+from .diagnostics import Diagnostic            # noqa: F401
+from .engine import lint_paths, lint_source    # noqa: F401
+from .registry import RULES                    # noqa: F401
+
+__all__ = ["Diagnostic", "RULES", "lint_paths", "lint_source",
+           "load_baseline", "write_baseline", "apply_baseline"]

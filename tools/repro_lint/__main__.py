@@ -1,0 +1,117 @@
+"""CLI for repro-lint.
+
+    python -m tools.repro_lint src tests tools
+    python -m tools.repro_lint src tests tools --baseline .repro-lint-baseline.json
+    python -m tools.repro_lint tests benchmarks --write-baseline .repro-lint-baseline.json
+    python -m tools.repro_lint tests/fixtures/lint --include-fixtures   # must fail
+    python -m tools.repro_lint --list-rules
+
+Exit codes: 0 = clean (or every finding baselined), 1 = non-baselined
+findings, 2 = usage error (missing path, unreadable baseline).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from . import baseline as baseline_mod
+from . import registry
+from .engine import lint_paths
+
+EXIT_CLEAN = 0
+EXIT_FINDINGS = 1
+EXIT_USAGE = 2
+
+
+def _repo_root() -> pathlib.Path:
+    return pathlib.Path(__file__).resolve().parents[2]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.repro_lint",
+        description="trace-safety & determinism static analysis "
+                    "(rule catalog: docs/static-analysis.md)")
+    ap.add_argument("paths", nargs="*",
+                    help="files/directories to lint (relative to the "
+                         "repo root)")
+    ap.add_argument("--baseline", metavar="FILE",
+                    help="tolerate findings recorded in this baseline "
+                         "(matched per (path, rule) count)")
+    ap.add_argument("--write-baseline", metavar="FILE",
+                    help="write current findings to FILE and exit 0")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--include-fixtures", action="store_true",
+                    help="also lint tests/fixtures/** (skipped by "
+                         "default; the lint fixture corpus is meant to "
+                         "fail)")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--root", default=None,
+                    help="repo root override (default: inferred from "
+                         "this file's location)")
+    args = ap.parse_args(argv)
+
+    from . import checkers  # noqa: F401  (populate the registry)
+    if args.list_rules:
+        for code in sorted(registry.RULES):
+            r = registry.RULES[code]
+            print(f"{r.code}  {r.name}: {r.summary}")
+        return EXIT_CLEAN
+
+    if not args.paths:
+        ap.print_usage(sys.stderr)
+        print("error: no paths given (and not --list-rules)",
+              file=sys.stderr)
+        return EXIT_USAGE
+
+    root = pathlib.Path(args.root).resolve() if args.root else _repo_root()
+    try:
+        diags = lint_paths(args.paths, root,
+                           include_fixtures=args.include_fixtures)
+    except FileNotFoundError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return EXIT_USAGE
+
+    if args.write_baseline:
+        counts = baseline_mod.write(args.write_baseline, diags)
+        print(f"wrote {sum(counts.values())} finding(s) across "
+              f"{len(counts)} (path, rule) group(s) to "
+              f"{args.write_baseline}")
+        return EXIT_CLEAN
+
+    stale = {}
+    if args.baseline:
+        try:
+            counts = baseline_mod.load(args.baseline)
+        except (OSError, ValueError, json.JSONDecodeError) as e:
+            print(f"error: cannot read baseline: {e}", file=sys.stderr)
+            return EXIT_USAGE
+        reported, stale = baseline_mod.apply(diags, counts)
+    else:
+        reported = diags
+
+    if args.format == "json":
+        print(json.dumps({
+            "findings": [d.to_json() for d in reported],
+            "baselined": len(diags) - len(reported),
+            "stale_baseline": stale,
+        }, indent=2))
+    else:
+        for d in reported:
+            print(d.format())
+        for key, surplus in sorted(stale.items()):
+            print(f"warning: baseline entry {key} over-budgets by "
+                  f"{surplus} (finding fixed? shrink the baseline)",
+                  file=sys.stderr)
+        n_base = len(diags) - len(reported)
+        summary = f"{len(reported)} finding(s)"
+        if n_base:
+            summary += f", {n_base} baselined"
+        print(summary)
+    return EXIT_FINDINGS if reported else EXIT_CLEAN
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,82 @@
+"""Baseline files: grandfathered findings, matched by (path, code) count.
+
+The baseline maps `"<path>::<code>"` to the number of findings that are
+tolerated there.  Matching by count (not line numbers) keeps the
+baseline stable under unrelated edits; it also makes the shrink-only
+policy checkable — `tests/test_repro_lint.py` asserts the committed
+baseline's total and that no entry is stale, so a PR can remove
+baseline debt but never silently add to it.
+
+A group that *exceeds* its budget reports every finding in the group:
+line-level attribution of "which one is new" is not decidable from
+counts, and showing the whole group is what lets the author pick which
+to fix.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, Iterable, List, Tuple
+
+from .diagnostics import Diagnostic
+
+VERSION = 1
+
+
+def group_key(d: Diagnostic) -> str:
+    return f"{d.path}::{d.code}"
+
+
+def counts_of(diags: Iterable[Diagnostic]) -> Dict[str, int]:
+    counts: Dict[str, int] = {}
+    for d in diags:
+        counts[group_key(d)] = counts.get(group_key(d), 0) + 1
+    return counts
+
+
+def load(path) -> Dict[str, int]:
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, dict) or data.get("version") != VERSION:
+        raise ValueError(f"{path}: not a repro-lint baseline "
+                         f"(want version {VERSION})")
+    counts = data.get("counts", {})
+    if not all(isinstance(k, str) and isinstance(v, int) and v > 0
+               for k, v in counts.items()):
+        raise ValueError(f"{path}: malformed baseline counts")
+    return dict(counts)
+
+
+def write(path, diags: Iterable[Diagnostic]) -> Dict[str, int]:
+    counts = counts_of(diags)
+    data = {
+        "version": VERSION,
+        "total": sum(counts.values()),
+        "counts": {k: counts[k] for k in sorted(counts)},
+    }
+    text = json.dumps(data, indent=2, sort_keys=False) + "\n"
+    pathlib.Path(path).write_text(text, encoding="utf-8")
+    return counts
+
+
+def apply(diags: List[Diagnostic], counts: Dict[str, int]
+          ) -> Tuple[List[Diagnostic], Dict[str, int]]:
+    """Split findings against a baseline.
+
+    Returns `(new, stale)`: `new` is every finding not covered by the
+    baseline budgets (a group over budget reports whole); `stale` maps
+    baseline keys whose budget exceeds the current finding count to the
+    unused surplus — debt that was paid down and should be removed from
+    the baseline file.
+    """
+    groups: Dict[str, List[Diagnostic]] = {}
+    for d in diags:
+        groups.setdefault(group_key(d), []).append(d)
+    new: List[Diagnostic] = []
+    for key, group in groups.items():
+        if len(group) > counts.get(key, 0):
+            new.extend(group)
+    stale = {key: budget - len(groups.get(key, ()))
+             for key, budget in counts.items()
+             if budget > len(groups.get(key, ()))}
+    return sorted(new), stale

@@ -1,0 +1,5 @@
+"""Checker modules self-register on import; importing this package is
+what populates the registry.  Order matters only for `--list-rules`
+display (kept in code order: RL1xx → RL6xx)."""
+from . import (jit_static, determinism, prng, dtype64, kernel_parity,
+               mesh_axes)  # noqa: F401

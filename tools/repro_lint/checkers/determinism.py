@@ -1,0 +1,93 @@
+"""RL2xx — determinism: no wall clocks or ambient randomness in the
+deterministic core.
+
+Bitwise-identical resume (`core/resilience.py`), sweep ≡ sharded_sweep
+equivalence, and the phase-salted trace seeding all assume that nothing
+under `src/repro/core/`, `src/repro/sharding/` or `src/repro/kernels/`
+reads a clock or an unseeded/global RNG.  `runtime/`, `serve/`,
+`launch/`, tools, benchmarks and tests may do both (they time things and
+generate smoke inputs) and are out of scope.
+"""
+from __future__ import annotations
+
+import ast
+
+from .. import registry
+from ..pyast import resolve_call
+from ..scopes import in_deterministic_core
+
+registry.rule(
+    "RL201", "wall-clock-in-core",
+    "no time.time()/monotonic()/datetime.now() in the deterministic "
+    "core: wall-clock values in outputs or control flow break "
+    "bitwise-identical resume")
+registry.rule(
+    "RL202", "unseeded-numpy-rng",
+    "np.random.default_rng()/RandomState() must be seeded and the "
+    "global np.random.* samplers are banned in the deterministic core: "
+    "trace generation must be a pure function of (seed, phase)")
+registry.rule(
+    "RL203", "stdlib-random-in-core",
+    "the stdlib `random` module is process-global state; deterministic "
+    "core code draws from seeded np.random.default_rng or jax.random "
+    "keys instead")
+
+_WALLCLOCK = {
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.date.today",
+}
+
+# global-state numpy samplers (module-level np.random.*, not Generator
+# methods); seeding the global state is just as order-dependent, so
+# np.random.seed is included
+_NUMPY_GLOBAL = {
+    "seed", "rand", "randn", "randint", "random", "random_sample",
+    "ranf", "sample", "normal", "uniform", "choice", "shuffle",
+    "permutation", "standard_normal", "poisson", "exponential", "beta",
+    "gamma", "binomial", "bytes", "get_state", "set_state",
+}
+
+
+def _is_seeded(call: ast.Call) -> bool:
+    if call.args and not (isinstance(call.args[0], ast.Constant)
+                          and call.args[0].value is None):
+        return True
+    return any(kw.arg == "seed" and not (
+        isinstance(kw.value, ast.Constant) and kw.value.value is None)
+        for kw in call.keywords)
+
+
+@registry.file_checker
+def check_determinism(ctx):
+    if not in_deterministic_core(ctx.scope_path):
+        return
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        q = resolve_call(node, ctx.aliases)
+        if q is None:
+            continue
+        if q in _WALLCLOCK:
+            yield ctx.diag(node, "RL201",
+                           f"wall-clock call `{q}()` in deterministic "
+                           "core (breaks bitwise resume/sweep "
+                           "equivalence)")
+        elif q in ("numpy.random.default_rng", "numpy.random.RandomState"):
+            if not _is_seeded(node):
+                yield ctx.diag(node, "RL202",
+                               f"unseeded `{q}()` in deterministic core;"
+                               " pass an explicit seed derived from the "
+                               "config's (seed, phase)")
+        elif q.startswith("numpy.random.") \
+                and q.rsplit(".", 1)[1] in _NUMPY_GLOBAL:
+            yield ctx.diag(node, "RL202",
+                           f"global-state `{q}()` in deterministic "
+                           "core; use a seeded np.random.default_rng "
+                           "generator instead")
+        elif q.startswith("random."):
+            yield ctx.diag(node, "RL203",
+                           f"stdlib `{q}()` in deterministic core; use "
+                           "a seeded np.random.default_rng or a "
+                           "jax.random key")

@@ -1,0 +1,203 @@
+"""RL1xx — jit-static hygiene.
+
+The sweep engines lean hard on `static_argnames` for jit-cache reuse
+across bucketed grids: statics must be hashable Python values, and
+anything *not* declared static is a tracer inside the function.  Two
+checks:
+
+* **RL101** — at repo call sites of a jitted function, a
+  `static_argnames` argument must not be passed an expression that is
+  array-typed by construction (a `jax.numpy.*` call, `jax.device_put`,
+  …).  A traced static either crashes at trace time (unhashable) or,
+  worse, retriggers compilation per value and defeats the bucketed
+  jit cache.
+* **RL102** — inside a directly-jitted function, Python `if`/`while` on
+  a parameter that is not declared static branches on a tracer.
+  Trace-safe predicates are exempt: `x is (not) None` (pytree-structure
+  dispatch), `isinstance(...)`, `len(...)`, and attribute access like
+  `x.shape`/`x.dtype`/`x.ndim` (static on tracers).
+
+Both checks resolve `static_argnames` through module-level constants and
+tuple concatenation (`_MC_STATICS + ("mesh",)`); when the static set
+cannot be resolved the function is skipped rather than guessed at.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from .. import registry
+from ..pyast import (dotted, fold_ints, fold_strings, param_names,
+                     resolve)
+
+registry.rule(
+    "RL101", "traced-static-arg",
+    "arguments declared in static_argnames must be hashable Python "
+    "values at call sites, never jnp arrays/tracers (jit-cache "
+    "bucketing contract)")
+registry.rule(
+    "RL102", "python-branch-on-traced-param",
+    "Python if/while on a non-static parameter of a jitted function "
+    "branches on a tracer; declare it static or use lax.cond/jnp.where")
+
+_JIT_NAMES = {"jax.jit", "jax.api.jit"}
+_PARTIAL_NAMES = {"functools.partial", "partial"}
+_TRACED_VALUE_PREFIXES = ("jax.numpy.",)
+_TRACED_VALUE_CALLS = {"jax.device_put", "jax.numpy.asarray"}
+_STATIC_ATTRS = {"shape", "dtype", "ndim", "size", "sharding"}
+_EXEMPT_CALLS = {"isinstance", "len", "getattr", "hasattr", "type"}
+
+
+def jit_statics(fndef, aliases, consts) -> Optional[Set[str]]:
+    """If `fndef` is directly jitted, return its static parameter-name
+    set; None if it is not jitted OR the statics cannot be resolved
+    statically (callers must then stand down)."""
+    params = param_names(fndef)
+    for dec in fndef.decorator_list:
+        target, kwargs = _jit_decorator(dec, aliases)
+        if target is None:
+            continue
+        statics: Set[str] = set()
+        for kw in kwargs:
+            if kw.arg == "static_argnames":
+                names = fold_strings(kw.value, consts)
+                if names is None:
+                    return None
+                statics.update(names)
+            elif kw.arg == "static_argnums":
+                nums = fold_ints(kw.value)
+                if nums is None:
+                    return None
+                for i in nums:
+                    if 0 <= i < len(params):
+                        statics.add(params[i])
+        return statics
+    return None
+
+
+def _jit_decorator(dec, aliases):
+    """-> (jit target, list of keywords) when `dec` is @jax.jit,
+    @jax.jit(...), or @functools.partial(jax.jit, ...)."""
+    if resolve(dotted(dec), aliases) in _JIT_NAMES:
+        return dec, []
+    if isinstance(dec, ast.Call):
+        q = resolve(dotted(dec.func), aliases)
+        if q in _JIT_NAMES:
+            return dec.func, dec.keywords
+        if q in _PARTIAL_NAMES and dec.args \
+                and resolve(dotted(dec.args[0]), aliases) in _JIT_NAMES:
+            return dec.args[0], dec.keywords
+    return None, []
+
+
+# ---------------------------------------------------------------------------
+# RL102 — Python branch on a traced parameter (file checker)
+# ---------------------------------------------------------------------------
+
+def _offending_names(test: ast.AST, traced: Set[str]) -> List[ast.Name]:
+    """Traced-parameter Name loads in a test expression, minus
+    trace-safe contexts."""
+    exempt_ids = set()
+    for node in ast.walk(test):
+        if isinstance(node, ast.Compare) \
+                and all(isinstance(op, (ast.Is, ast.IsNot))
+                        for op in node.ops) \
+                and all(isinstance(c, ast.Constant) and c.value is None
+                        for c in node.comparators):
+            exempt_ids.update(id(n) for n in ast.walk(node))
+        elif isinstance(node, ast.Attribute) \
+                and node.attr in _STATIC_ATTRS:
+            exempt_ids.update(id(n) for n in ast.walk(node))
+        elif isinstance(node, ast.Call):
+            fn = node.func
+            if isinstance(fn, ast.Name) and fn.id in _EXEMPT_CALLS:
+                exempt_ids.update(id(n) for n in ast.walk(node))
+    return [node for node in ast.walk(test)
+            if isinstance(node, ast.Name) and node.id in traced
+            and isinstance(node.ctx, ast.Load)
+            and id(node) not in exempt_ids]
+
+
+@registry.file_checker
+def check_jit_branches(ctx):
+    for fndef in ast.walk(ctx.tree):
+        if not isinstance(fndef, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        statics = jit_statics(fndef, ctx.aliases, ctx.consts)
+        if statics is None:
+            continue
+        traced = set(param_names(fndef)) - statics
+        for node in _walk_own_body(fndef):
+            if isinstance(node, (ast.If, ast.While)):
+                for name in _offending_names(node.test, traced):
+                    yield ctx.diag(
+                        name, "RL102",
+                        f"Python {'if' if isinstance(node, ast.If) else 'while'}"
+                        f" on traced parameter `{name.id}` of jitted "
+                        f"`{fndef.name}`; declare it in static_argnames "
+                        "or use lax.cond/jnp.where")
+
+
+def _walk_own_body(fndef):
+    """Walk a function body without descending into nested defs (their
+    parameters shadow; they get their own analysis if jitted)."""
+    stack = list(fndef.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef, ast.Lambda)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+# ---------------------------------------------------------------------------
+# RL101 — traced value passed to a static arg (project checker:
+# the jitted function and the call site may live in different modules)
+# ---------------------------------------------------------------------------
+
+def _is_traced_expr(node: ast.AST, aliases) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    q = resolve(dotted(node.func), aliases)
+    if q is None:
+        return False
+    return q in _TRACED_VALUE_CALLS \
+        or q.startswith(_TRACED_VALUE_PREFIXES)
+
+
+@registry.project_checker
+def check_static_call_sites(project):
+    # pass 1: name -> static names, over every scanned module
+    statics_by_name: Dict[str, Set[str]] = {}
+    for ctx in project.contexts:
+        for fndef in ast.walk(ctx.tree):
+            if not isinstance(fndef, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                continue
+            statics = jit_statics(fndef, ctx.aliases, ctx.consts)
+            if statics:
+                statics_by_name.setdefault(fndef.name, set()) \
+                    .update(statics)
+    if not statics_by_name:
+        return
+    # pass 2: call sites anywhere in the scanned set
+    for ctx in project.contexts:
+        for call in ast.walk(ctx.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            name = dotted(call.func)
+            if name is None:
+                continue
+            statics = statics_by_name.get(name.rsplit(".", 1)[-1])
+            if not statics:
+                continue
+            for kw in call.keywords:
+                if kw.arg in statics \
+                        and _is_traced_expr(kw.value, ctx.aliases):
+                    yield ctx.diag(
+                        kw.value, "RL101",
+                        f"static argument `{kw.arg}` of jitted "
+                        f"`{name}` is passed a traced-array "
+                        "expression; statics must be hashable Python "
+                        "values")

@@ -1,0 +1,114 @@
+"""RL5xx — kernel/ref pair parity.
+
+Every Pallas kernel package `…/kernels/<name>/` ships three modules:
+`kernel.py` (the Pallas implementation), `ref.py` (the pure-jnp oracle
+the bitwise harness tests against), and `ops.py` (the jitted wrapper,
+which must expose an `interpret` path so CPU CI can run the kernel
+without a TPU).  The equivalence harness is only as good as this
+structure, so the linter enforces it:
+
+* **RL501** — `kernel.py` without a sibling `ref.py`.
+* **RL502** — no public `ref.py` function whose parameter names are an
+  ordered subset of a public `kernel.py` function's parameters (the
+  oracle mirrors the kernel's argument convention; the kernel may add
+  trailing tuning knobs like `block_r`/`interpret`).
+* **RL503** — missing `ops.py`, or no public `ops.py` function taking
+  an `interpret` parameter.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Dict, List, Optional
+
+from .. import registry
+from ..pyast import param_names
+from ..scopes import norm
+
+registry.rule(
+    "RL501", "kernel-missing-ref",
+    "every kernels/<name>/kernel.py needs a ref.py jnp oracle: the "
+    "bitwise equivalence harness is the kernel's correctness proof")
+registry.rule(
+    "RL502", "kernel-ref-signature-mismatch",
+    "ref.py must expose a public function whose parameters mirror the "
+    "kernel entry point (ordered subset; kernel-only tuning knobs like "
+    "block sizes/interpret may trail)")
+registry.rule(
+    "RL503", "ops-missing-interpret",
+    "kernels/<name>/ops.py must exist and expose an `interpret` "
+    "parameter so CPU CI can prove kernel ≡ oracle without a TPU")
+
+
+def _public_functions(tree: ast.Module) -> List[ast.FunctionDef]:
+    return [node for node in tree.body
+            if isinstance(node, ast.FunctionDef)
+            and not node.name.startswith("_")]
+
+
+def _ordered_subset(small: List[str], big: List[str]) -> bool:
+    pos = 0
+    for name in small:
+        try:
+            pos = big.index(name, pos) + 1
+        except ValueError:
+            return False
+    return True
+
+
+def _parse_sibling(project, directory: str, filename: str,
+                   by_path: Dict[str, ast.Module]) -> Optional[ast.Module]:
+    """The sibling module's AST: from the scanned set if present, else
+    parsed off disk (covers single-file lint invocations)."""
+    rel = f"{directory}/{filename}" if directory else filename
+    if rel in by_path:
+        return by_path[rel]
+    path = pathlib.Path(project.root) / rel
+    if not path.is_file():
+        return None
+    try:
+        return ast.parse(path.read_text(encoding="utf-8"))
+    except SyntaxError:
+        return None
+
+
+@registry.project_checker
+def check_kernel_parity(project):
+    by_path = {norm(ctx.path): ctx.tree for ctx in project.contexts}
+    for ctx in project.contexts:
+        rel = norm(ctx.path)
+        parts = rel.split("/")
+        if parts[-1] != "kernel.py" or "kernels" not in parts[:-1]:
+            continue
+        directory = "/".join(parts[:-1])
+
+        kernel_fns = _public_functions(ctx.tree)
+        ref_tree = _parse_sibling(project, directory, "ref.py", by_path)
+        if ref_tree is None:
+            yield ctx.diag(1, "RL501",
+                           f"`{directory}/` has no ref.py oracle for "
+                           "kernel.py (bitwise-harness contract)")
+        elif kernel_fns:
+            ref_params = [param_names(fn)
+                          for fn in _public_functions(ref_tree)]
+            matched = any(
+                _ordered_subset(rp, param_names(kfn))
+                for kfn in kernel_fns for rp in ref_params)
+            if not matched:
+                yield ctx.diag(
+                    kernel_fns[0], "RL502",
+                    f"no public function in `{directory}/ref.py` "
+                    "mirrors the kernel entry point's parameters "
+                    "(ordered-subset match failed)")
+
+        ops_tree = _parse_sibling(project, directory, "ops.py", by_path)
+        if ops_tree is None:
+            yield ctx.diag(1, "RL503",
+                           f"`{directory}/` has no ops.py jit wrapper "
+                           "(interpret-path contract)")
+        elif not any("interpret" in param_names(fn)
+                     for fn in _public_functions(ops_tree)):
+            yield ctx.diag(1, "RL503",
+                           f"no public function in `{directory}/ops.py`"
+                           " takes `interpret`; CPU CI cannot exercise "
+                           "the kernel path")

@@ -1,0 +1,78 @@
+"""RL601 — mesh-axis naming.
+
+`sharding/axes.py` is the single source of truth for mesh- and
+logical-axis names (`CONFIG_AXIS`/`TRIAL_AXIS`, the `SWEEP_RULES`
+table, the model-mesh rule sets).  A `PartitionSpec("confg")` typo
+elsewhere compiles fine and silently replicates instead of sharding —
+the worst kind of perf bug.  This checker collects every axis-name
+string literal used in `PartitionSpec(...)`, `Mesh`/`make_mesh` axis
+tuples and `axis_name=`/`axis_names=` keywords, and requires it to
+appear in axes.py's declared-name table (axes.py itself is exempt — it
+is the declaration site).
+"""
+from __future__ import annotations
+
+import ast
+
+from .. import registry
+from ..pyast import dotted, resolve, string_args
+from ..scopes import is_axes_module
+
+registry.rule(
+    "RL601", "unknown-mesh-axis",
+    "PartitionSpec/Mesh/shard_map axis-name literals must be declared "
+    "in sharding/axes.py (SWEEP_RULES/axis constants); a typo'd axis "
+    "silently replicates instead of sharding")
+
+_SPEC_CALLS = ("PartitionSpec",)
+_MESH_CALLS = ("Mesh", "make_mesh")
+_AXIS_KWARGS = {"axis_name"}
+_AXIS_TUPLE_KWARGS = {"axis_names"}
+
+
+def _literal_axis_names(call: ast.Call, aliases):
+    """Yield (lineno, axis-name literal) used by this call, if it is an
+    axis-naming construct."""
+    q = resolve(dotted(call.func), aliases) or ""
+    base = q.rsplit(".", 1)[-1]
+    if base in _SPEC_CALLS:
+        yield from string_args(call)
+    elif base in _MESH_CALLS and len(call.args) >= 2:
+        arg = call.args[1]
+        if isinstance(arg, (ast.Tuple, ast.List)):
+            for elt in arg.elts:
+                if isinstance(elt, ast.Constant) \
+                        and isinstance(elt.value, str):
+                    yield elt.lineno, elt.value
+        elif isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+            yield arg.lineno, arg.value
+    for kw in call.keywords:
+        if kw.arg in _AXIS_KWARGS and isinstance(kw.value, ast.Constant) \
+                and isinstance(kw.value.value, str):
+            yield kw.value.lineno, kw.value.value
+        elif kw.arg in _AXIS_TUPLE_KWARGS \
+                and isinstance(kw.value, (ast.Tuple, ast.List)):
+            for elt in kw.value.elts:
+                if isinstance(elt, ast.Constant) \
+                        and isinstance(elt.value, str):
+                    yield elt.lineno, elt.value
+
+
+@registry.project_checker
+def check_mesh_axes(project):
+    allowed = project.allowed_mesh_axes()
+    if allowed is None:       # no axes.py in reach: contract unknowable
+        return
+    shown = ", ".join(sorted(allowed))
+    for ctx in project.contexts:
+        if is_axes_module(ctx.scope_path):
+            continue
+        for call in ast.walk(ctx.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            for lineno, name in _literal_axis_names(call, ctx.aliases):
+                if name not in allowed:
+                    yield ctx.diag(
+                        lineno, "RL601",
+                        f"axis name {name!r} is not declared in "
+                        f"sharding/axes.py (known axes: {shown})")

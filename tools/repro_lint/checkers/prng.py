@@ -1,0 +1,180 @@
+"""RL301 — PRNG key discipline: a jax.random key is consumed once.
+
+The bug class PR 5 fixed in the refill traces: drawing twice from the
+same key (or reusing a key after `split`) silently correlates streams
+that the math assumes independent.  The checker runs a linear
+must-consume analysis per function (and over module-level code):
+
+* a variable becomes a *tracked key* when assigned from
+  `jax.random.PRNGKey/key/split/fold_in` (tuple unpacking and
+  subscripts of `split` results included), or when it is a parameter
+  named `key`/`prng_key`/`*_key`;
+* a *consumption* is passing it as the first argument to any
+  `jax.random.*` sampler, or to `split` (reusing a key after splitting
+  it is exactly the classic bug); `fold_in` derives a new stream and
+  does not consume;
+* consuming a key that this path already consumed — including a second
+  pass over loop bodies for keys consumed once per iteration — fires
+  RL301.  `if`/`else` branches merge must-consume (both branches), so
+  exclusive-path use never false-positives.
+
+Reassignment (including the `key, sub = jax.random.split(key)` idiom,
+where the value is analyzed before the targets rebind) resets tracking.
+Passing a key to a non-`jax.random` helper is not consumption: the
+helper owns its own discipline.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set, Tuple
+
+from .. import registry
+from ..pyast import dotted, resolve
+
+registry.rule(
+    "RL301", "prng-key-reuse",
+    "a jax.random key must be consumed at most once; split/fold_in "
+    "before drawing again (correlated-stream bug class of PR 5)")
+
+_PRODUCERS = {"jax.random.PRNGKey", "jax.random.key", "jax.random.split",
+              "jax.random.fold_in", "jax.random.wrap_key_data",
+              "jax.random.clone"}
+_NON_CONSUMING = {"PRNGKey", "key", "fold_in", "wrap_key_data", "clone",
+                  "key_data", "key_impl"}
+_KEY_PARAM_NAMES = ("key", "prng_key")
+
+
+def _is_key_param(name: str) -> bool:
+    return name in _KEY_PARAM_NAMES or name.endswith("_key")
+
+
+class _FunctionScan:
+    def __init__(self, ctx):
+        self.ctx = ctx
+        self.findings: Set[Tuple[str, int]] = set()
+
+    # -- expression side ---------------------------------------------------
+
+    def _producer_call(self, node: ast.AST) -> bool:
+        """Is `node` a call (or subscript of a call) whose result is a
+        fresh jax.random key?"""
+        if isinstance(node, ast.Subscript):
+            node = node.value
+        if isinstance(node, ast.Call):
+            q = resolve(dotted(node.func), self.ctx.aliases)
+            return q in _PRODUCERS
+        return False
+
+    def _scan_expr(self, node: ast.AST, state: Dict[str, bool]):
+        """Record key consumptions inside an expression."""
+        for call in ast.walk(node):
+            if not isinstance(call, ast.Call):
+                continue
+            q = resolve(dotted(call.func), self.ctx.aliases)
+            if q is None or not q.startswith("jax.random."):
+                continue
+            fn = q.rsplit(".", 1)[1]
+            if fn in _NON_CONSUMING:
+                continue
+            if call.args and isinstance(call.args[0], ast.Name):
+                var = call.args[0].id
+                if var in state:
+                    if state[var]:
+                        self.findings.add((var, call.lineno))
+                    state[var] = True
+
+    # -- statement side ----------------------------------------------------
+
+    def _bind_targets(self, targets, value, state: Dict[str, bool]):
+        fresh = self._producer_call(value)
+        for target in targets:
+            if isinstance(target, ast.Name):
+                if fresh:
+                    state[target.id] = False
+                else:
+                    state.pop(target.id, None)
+            elif isinstance(target, (ast.Tuple, ast.List)):
+                for elt in target.elts:
+                    if isinstance(elt, ast.Name):
+                        if fresh:
+                            state[elt.id] = False
+                        else:
+                            state.pop(elt.id, None)
+
+    def scan_body(self, stmts: List[ast.stmt], state: Dict[str, bool]):
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue  # analyzed in their own scope
+            if isinstance(stmt, ast.Assign):
+                self._scan_expr(stmt.value, state)
+                self._bind_targets(stmt.targets, stmt.value, state)
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                self._scan_expr(stmt.value, state)
+                self._bind_targets([stmt.target], stmt.value, state)
+            elif isinstance(stmt, ast.If):
+                self._scan_expr(stmt.test, state)
+                body_state = dict(state)
+                else_state = dict(state)
+                self.scan_body(stmt.body, body_state)
+                self.scan_body(stmt.orelse, else_state)
+                for var in state:
+                    state[var] = (body_state.get(var, False)
+                                  and else_state.get(var, False))
+            elif isinstance(stmt, (ast.For, ast.While, ast.AsyncFor)):
+                if isinstance(stmt, (ast.For, ast.AsyncFor)):
+                    self._scan_expr(stmt.iter, state)
+                    self._bind_targets([stmt.target], stmt.iter, state)
+                else:
+                    self._scan_expr(stmt.test, state)
+                # two passes: a key consumed once per iteration is a
+                # reuse from the second iteration on
+                self.scan_body(stmt.body, state)
+                self.scan_body(stmt.body, state)
+                self.scan_body(stmt.orelse, state)
+            elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                for item in stmt.items:
+                    self._scan_expr(item.context_expr, state)
+                self.scan_body(stmt.body, state)
+            elif isinstance(stmt, ast.Try):
+                self.scan_body(stmt.body, state)
+                for handler in stmt.handlers:
+                    self.scan_body(handler.body, dict(state))
+                self.scan_body(stmt.orelse, state)
+                self.scan_body(stmt.finalbody, state)
+            else:
+                for value in ast.iter_child_nodes(stmt):
+                    if isinstance(value, ast.expr):
+                        self._scan_expr(value, state)
+
+
+@registry.file_checker
+def check_prng(ctx):
+    scans: List[Tuple[_FunctionScan, Dict[str, bool]]] = []
+
+    # module-level straight-line code (the fixture corpus shape)
+    mod_scan = _FunctionScan(ctx)
+    mod_scan.scan_body(ctx.tree.body, {})
+    scans.append(mod_scan)
+
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        scan = _FunctionScan(ctx)
+        state = {name: False for name in _iter_params(node)
+                 if _is_key_param(name)}
+        scan.scan_body(node.body, state)
+        scans.append(scan)
+
+    for scan, *_ in ((s,) for s in scans):
+        for var, line in sorted(scan.findings, key=lambda f: f[1]):
+            yield ctx.diag(line, "RL301",
+                           f"jax.random key `{var}` consumed again "
+                           "without an intervening split/fold_in "
+                           "(correlated streams)")
+
+
+def _iter_params(fndef):
+    a = fndef.args
+    for p in (*a.posonlyargs, *a.args, *a.kwonlyargs):
+        yield p.arg

@@ -1,0 +1,73 @@
+"""Diagnostics and inline-directive parsing for repro-lint.
+
+A diagnostic is (path, line, code, message); `path` is always a
+posix-style path relative to the repo root so baselines are portable
+across checkouts.
+
+Inline directives live in comments:
+
+    x = foo()  # repro-lint: disable=RL201
+    # repro-lint: disable-next-line=RL201,RL301
+    # repro-lint: path=src/repro/core/fixture.py   (first 10 lines only)
+
+`disable=` suppresses the listed codes on its own line,
+`disable-next-line=` on the following line.  `path=` overrides the
+*scope* path used for path-scoped rules (determinism, dtype) without
+changing the reported path — it exists so the lint fixture corpus under
+`tests/fixtures/lint/` can exercise rules whose scope is
+`src/repro/core/` etc.; production code has no reason to use it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+_DIRECTIVE = re.compile(r"#\s*repro-lint:\s*(?P<body>[^\n]*)")
+
+# how many leading lines may carry a `path=` scope override
+_PATH_DIRECTIVE_WINDOW = 10
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Diagnostic:
+    path: str
+    line: int
+    code: str
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+    def to_json(self) -> dict:
+        return {"path": self.path, "line": self.line,
+                "code": self.code, "message": self.message}
+
+
+def parse_directives(lines: List[str]
+                     ) -> Tuple[Dict[int, Set[str]], Optional[str]]:
+    """Scan raw source lines for repro-lint comment directives.
+
+    Returns `(suppressions, scope_path)` where `suppressions` maps a
+    1-based line number to the set of RL codes disabled on that line,
+    and `scope_path` is the `path=` override (or None).
+    """
+    suppressions: Dict[int, Set[str]] = {}
+    scope_path: Optional[str] = None
+    for lineno, text in enumerate(lines, start=1):
+        m = _DIRECTIVE.search(text)
+        if m is None:
+            continue
+        for token in m.group("body").split():
+            if "=" not in token:
+                continue
+            key, _, value = token.partition("=")
+            codes = {c for c in value.split(",") if c}
+            if key == "disable":
+                suppressions.setdefault(lineno, set()).update(codes)
+            elif key == "disable-next-line":
+                suppressions.setdefault(lineno + 1, set()).update(codes)
+            elif (key == "path" and scope_path is None
+                  and lineno <= _PATH_DIRECTIVE_WINDOW):
+                scope_path = value
+    return suppressions, scope_path

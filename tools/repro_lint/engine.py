@@ -1,0 +1,227 @@
+"""File discovery, parsing, and checker dispatch.
+
+`lint_paths(paths, root)` is the programmatic front door (the CLI in
+`__main__` is a thin wrapper): it walks the given files/directories for
+`*.py`, parses each once, runs every registered file checker on each
+file and every project checker on the whole set, applies inline
+suppressions, and returns sorted diagnostics.
+
+The lint *fixture corpus* (`tests/fixtures/lint/`) is skipped by
+default — its bad files exist to fail — and re-included with
+`include_fixtures=True` (CLI `--include-fixtures`), which is how the CI
+smoke leg proves the linter still fires.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from . import pyast, registry, scopes
+from .diagnostics import Diagnostic, parse_directives
+
+registry.rule("RL000", "syntax-error",
+              "file must parse: a file the checkers cannot read is a "
+              "file whose contracts cannot be verified")
+
+_SKIP_DIR_NAMES = {"__pycache__", ".git", ".venv", "node_modules",
+                   ".pytest_cache", "build", "dist"}
+_FIXTURE_MARKER = ("tests", "fixtures")
+
+
+class FileContext:
+    """Everything a file checker needs about one parsed file."""
+
+    def __init__(self, path: str, scope_path: str, tree: ast.Module,
+                 lines: List[str], root: pathlib.Path):
+        self.path = path                # repo-relative, for reporting
+        self.scope_path = scope_path    # for scope decisions (pragma-able)
+        self.tree = tree
+        self.lines = lines
+        self.root = root
+        self.aliases = pyast.import_aliases(tree)
+        self.consts = pyast.module_string_tuples(tree)
+
+    def diag(self, node_or_line, code: str, message: str) -> Diagnostic:
+        line = (node_or_line if isinstance(node_or_line, int)
+                else getattr(node_or_line, "lineno", 1))
+        return Diagnostic(self.path, line, code, message)
+
+
+class ProjectContext:
+    """One lint invocation: the parsed file set plus lazily computed
+    repo-wide facts (the axes.py allowed-axis table)."""
+
+    def __init__(self, root: pathlib.Path, contexts: Sequence[FileContext]):
+        self.root = root
+        self.contexts = list(contexts)
+        self._allowed_axes: Optional[frozenset] = None
+
+    def allowed_mesh_axes(self) -> Optional[frozenset]:
+        """Axis-name strings declared in `sharding/axes.py` (ALL_CAPS
+        string constants plus every string key/value in its dict
+        literals, tuple elements included).  None when axes.py is not
+        available — the mesh-axis rule then stands down rather than
+        guessing the contract."""
+        if self._allowed_axes is not None:
+            return self._allowed_axes
+        tree = None
+        for ctx in self.contexts:
+            if scopes.is_axes_module(ctx.scope_path):
+                tree = ctx.tree
+                break
+        if tree is None:
+            path = self.root / scopes.AXES_MODULE
+            if not path.is_file():
+                return None
+            try:
+                tree = ast.parse(path.read_text(encoding="utf-8"))
+            except SyntaxError:
+                return None
+        names = set()
+
+        def _add_str(item):
+            if isinstance(item, ast.Constant) and isinstance(item.value, str):
+                names.add(item.value)
+
+        for node in ast.walk(tree):
+            # tuples of axis names: ("pod", "data"), ("data",), …
+            if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+                for elt in node.elts:
+                    _add_str(elt)
+            # rule tables: logical-name keys AND mesh-axis values
+            elif isinstance(node, ast.Dict):
+                for item in (*node.keys, *node.values):
+                    _add_str(item)
+            # CONFIG_AXIS = "config"; r["seq"] = "pod"
+            elif isinstance(node, ast.Assign):
+                for target in node.targets:
+                    if isinstance(target, ast.Name) and target.id.isupper():
+                        _add_str(node.value)
+                    elif isinstance(target, ast.Subscript):
+                        _add_str(target.slice)
+                        _add_str(node.value)
+        self._allowed_axes = frozenset(names)
+        return self._allowed_axes
+
+
+def _is_fixture(rel_parts: Tuple[str, ...]) -> bool:
+    for i in range(len(rel_parts) - 1):
+        if rel_parts[i:i + 2] == _FIXTURE_MARKER:
+            return True
+    return False
+
+
+def discover(paths: Sequence[str], root: pathlib.Path,
+             include_fixtures: bool = False) -> List[pathlib.Path]:
+    """Expand files/directories into a sorted, de-duplicated list of
+    `*.py` files under `root`."""
+    out = []
+    seen = set()
+    for p in paths:
+        path = pathlib.Path(p)
+        if not path.is_absolute():
+            path = root / path
+        if path.is_dir():
+            candidates = sorted(path.rglob("*.py"))
+        elif path.is_file():
+            candidates = [path]
+        else:
+            raise FileNotFoundError(f"no such file or directory: {p}")
+        for c in candidates:
+            c = c.resolve()
+            if c in seen:
+                continue
+            rel = _relpath(c, root)
+            parts = tuple(rel.split("/"))
+            if _SKIP_DIR_NAMES.intersection(parts):
+                continue
+            if not include_fixtures and _is_fixture(parts):
+                continue
+            seen.add(c)
+            out.append(c)
+    return out
+
+
+def _relpath(path: pathlib.Path, root: pathlib.Path) -> str:
+    try:
+        return scopes.norm(path.resolve().relative_to(root.resolve()))
+    except ValueError:
+        return scopes.norm(path)
+
+
+def parse_file(path: pathlib.Path, root: pathlib.Path
+               ) -> Tuple[Optional[FileContext], Optional[Diagnostic],
+                          Dict[int, set]]:
+    """-> (context, parse-error diagnostic, suppressions)."""
+    rel = _relpath(path, root)
+    source = path.read_text(encoding="utf-8")
+    return parse_source(source, rel, root)
+
+
+def parse_source(source: str, rel: str, root: pathlib.Path):
+    lines = source.splitlines()
+    suppressions, pragma_path = parse_directives(lines)
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return None, Diagnostic(rel, e.lineno or 1, "RL000",
+                                f"syntax error: {e.msg}"), suppressions
+    ctx = FileContext(rel, pragma_path or rel, tree, lines, root)
+    return ctx, None, suppressions
+
+
+def _run_checkers(contexts: List[FileContext],
+                  root: pathlib.Path) -> List[Diagnostic]:
+    diags: List[Diagnostic] = []
+    for ctx in contexts:
+        for checker in registry.FILE_CHECKERS:
+            diags.extend(checker(ctx))
+    project = ProjectContext(root, contexts)
+    for checker in registry.PROJECT_CHECKERS:
+        diags.extend(checker(project))
+    return diags
+
+
+def lint_paths(paths: Sequence[str], root: pathlib.Path,
+               include_fixtures: bool = False) -> List[Diagnostic]:
+    """Lint every `*.py` under `paths`; returns sorted diagnostics with
+    inline suppressions already applied."""
+    from . import checkers  # noqa: F401  (registers all rules)
+    contexts: List[FileContext] = []
+    diags: List[Diagnostic] = []
+    suppressions: Dict[str, Dict[int, set]] = {}
+    for path in discover(paths, root, include_fixtures):
+        ctx, err, supp = parse_file(path, root)
+        if err is not None:
+            diags.append(err)
+        if ctx is not None:
+            contexts.append(ctx)
+            suppressions[ctx.path] = supp
+    diags.extend(_run_checkers(contexts, root))
+    return _filter_suppressed(diags, suppressions)
+
+
+def lint_source(source: str, path: str, root: pathlib.Path
+                ) -> List[Diagnostic]:
+    """Lint a single in-memory source file (the unit-test entry point).
+    `path` is the reported repo-relative path; a `# repro-lint: path=`
+    directive inside `source` still overrides the scope path."""
+    from . import checkers  # noqa: F401
+    ctx, err, supp = parse_source(source, scopes.norm(path), root)
+    if err is not None:
+        return [err]
+    diags = _run_checkers([ctx], root)
+    return _filter_suppressed(diags, {ctx.path: supp})
+
+
+def _filter_suppressed(diags: Iterable[Diagnostic],
+                       suppressions: Dict[str, Dict[int, set]]
+                       ) -> List[Diagnostic]:
+    out = []
+    for d in diags:
+        disabled = suppressions.get(d.path, {}).get(d.line, ())
+        if d.code in disabled:
+            continue
+        out.append(d)
+    return sorted(set(out))

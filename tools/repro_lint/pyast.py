@@ -1,0 +1,135 @@
+"""Small AST helpers shared by the checkers: dotted-name resolution
+through import aliases, and constant folding of string tuples (enough to
+resolve `static_argnames=_MC_STATICS + ("mesh",)`)."""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """`a.b.c` Attribute/Name chain -> "a.b.c", else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def import_aliases(tree: ast.AST) -> Dict[str, str]:
+    """Map local names to the fully-qualified module/attribute they were
+    imported as.  `import numpy as np` -> {"np": "numpy"};
+    `from jax import random` -> {"random": "jax.random"};
+    `from jax.random import split as sp` -> {"sp": "jax.random.split"}.
+    Plain `import jax.random` binds only the root name `jax`.
+    """
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.asname:
+                    aliases[a.asname] = a.name
+                else:
+                    root = a.name.split(".", 1)[0]
+                    aliases[root] = root
+        elif isinstance(node, ast.ImportFrom):
+            mod = ("." * node.level) + (node.module or "")
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                aliases[a.asname or a.name] = f"{mod}.{a.name}" if mod \
+                    else a.name
+    return aliases
+
+
+def resolve(name: Optional[str], aliases: Dict[str, str]) -> Optional[str]:
+    """Expand the first segment of a dotted name through the alias map."""
+    if name is None:
+        return None
+    head, _, rest = name.partition(".")
+    base = aliases.get(head, head)
+    return f"{base}.{rest}" if rest else base
+
+
+def resolve_call(call: ast.Call, aliases: Dict[str, str]) -> Optional[str]:
+    return resolve(dotted(call.func), aliases)
+
+
+def module_string_tuples(tree: ast.Module) -> Dict[str, Tuple[str, ...]]:
+    """Module-level `NAME = ("a", "b", ...)` / `NAME = "a"` constants,
+    including concatenations of other such constants — the shapes
+    `static_argnames` references take in this repo."""
+    consts: Dict[str, Tuple[str, ...]] = {}
+    for node in tree.body:
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            folded = fold_strings(node.value, consts)
+            if folded is not None:
+                consts[node.targets[0].id] = folded
+    return consts
+
+
+def fold_strings(node: ast.AST,
+                 consts: Dict[str, Tuple[str, ...]]
+                 ) -> Optional[Tuple[str, ...]]:
+    """Fold an expression into a tuple of strings, or None if it is not
+    statically a string collection.  Handles string constants,
+    tuple/list literals, references to previously folded module
+    constants, and `+` concatenation."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: List[str] = []
+        for elt in node.elts:
+            folded = fold_strings(elt, consts)
+            if folded is None or len(folded) != 1:
+                return None
+            out.extend(folded)
+        return tuple(out)
+    if isinstance(node, ast.Name):
+        return consts.get(node.id)
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Add):
+        left = fold_strings(node.left, consts)
+        right = fold_strings(node.right, consts)
+        if left is not None and right is not None:
+            return left + right
+    return None
+
+
+def fold_ints(node: ast.AST) -> Optional[Tuple[int, ...]]:
+    """Fold an expression into a tuple of ints (for static_argnums)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: List[int] = []
+        for elt in node.elts:
+            folded = fold_ints(elt)
+            if folded is None or len(folded) != 1:
+                return None
+            out.extend(folded)
+        return tuple(out)
+    return None
+
+
+def param_names(fndef) -> List[str]:
+    """All parameter names, in declaration order (posonly, positional,
+    keyword-only)."""
+    a = fndef.args
+    return [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+
+
+def string_args(call: ast.Call):
+    """Yield `(lineno, value)` for every string literal appearing as a
+    positional argument or inside a tuple/list positional argument."""
+    for arg in call.args:
+        if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+            yield arg.lineno, arg.value
+        elif isinstance(arg, (ast.Tuple, ast.List)):
+            for elt in arg.elts:
+                if isinstance(elt, ast.Constant) \
+                        and isinstance(elt.value, str):
+                    yield elt.lineno, elt.value

@@ -1,0 +1,52 @@
+"""Rule + checker registry.
+
+Each rule has an `RL###` code, a short kebab-case name, and a one-line
+summary of the source-level contract it protects.  Checkers come in two
+flavors:
+
+* **file checkers** — `fn(ctx: FileContext) -> Iterable[Diagnostic]`,
+  run once per parsed file; everything the checker needs is local.
+* **project checkers** — `fn(project: ProjectContext) ->
+  Iterable[Diagnostic]`, run once per lint invocation; used by rules
+  that relate files to each other (kernel/ref parity, cross-module
+  jit-static call sites, the axes.py allowed-name table).
+
+Checker modules self-register at import time (see `checkers/__init__`),
+so the registry is also the single source of truth for `--list-rules`,
+the docs rule catalog test, and the every-rule-has-a-firing-fixture
+meta-test.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    code: str
+    name: str
+    summary: str
+
+
+RULES: Dict[str, Rule] = {}
+FILE_CHECKERS: List[Callable] = []
+PROJECT_CHECKERS: List[Callable] = []
+
+
+def rule(code: str, name: str, summary: str) -> Rule:
+    if code in RULES:
+        raise ValueError(f"duplicate rule code {code}")
+    r = Rule(code, name, summary)
+    RULES[code] = r
+    return r
+
+
+def file_checker(fn: Callable) -> Callable:
+    FILE_CHECKERS.append(fn)
+    return fn
+
+
+def project_checker(fn: Callable) -> Callable:
+    PROJECT_CHECKERS.append(fn)
+    return fn

@@ -1,0 +1,47 @@
+"""Path scopes: which repo regions each contract applies to.
+
+Scopes are decided on the file's *scope path* — normally its repo-root-
+relative path, overridable by a `# repro-lint: path=` directive in the
+lint fixture corpus (see `diagnostics`).
+"""
+from __future__ import annotations
+
+# Deterministic core: everything a sweep/resume/jit-cache bitwise
+# guarantee flows through.  Wall clocks, unseeded RNGs and stdlib
+# `random` are banned here; `runtime/`, `serve/`, `launch/`, tools and
+# benchmarks may time and randomize freely.
+DETERMINISTIC_PREFIXES = (
+    "src/repro/core/",
+    "src/repro/sharding/",
+    "src/repro/kernels/",
+)
+
+# Kernel-reachable modules: the float32 kernel contract
+# (`kernels/placement_score/ops.py` rejects float64 inputs) extends to
+# every module whose arrays can flow into a kernel call.
+KERNEL_REACHABLE_CORE = {
+    "placement.py", "singlehall.py", "fleet.py", "sweep.py",
+    "mc_sweep.py", "quantiles.py",
+}
+
+AXES_MODULE = "src/repro/sharding/axes.py"
+
+
+def norm(path) -> str:
+    return str(path).replace("\\", "/")
+
+
+def in_deterministic_core(path) -> bool:
+    return norm(path).startswith(DETERMINISTIC_PREFIXES)
+
+
+def in_kernel_reachable(path) -> bool:
+    p = norm(path)
+    if p.startswith("src/repro/kernels/"):
+        return True
+    return (p.startswith("src/repro/core/")
+            and p.rsplit("/", 1)[-1] in KERNEL_REACHABLE_CORE)
+
+
+def is_axes_module(path) -> bool:
+    return norm(path) == AXES_MODULE
